@@ -1,0 +1,26 @@
+"""Shared benchmark plumbing: CSV rows + the paper's network model."""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import List
+
+ROWS: List[str] = []
+
+# the paper's LAN setup (§4.1)
+NET_BW_BPS = 9.6e9
+NET_LAT_S = 0.165e-3
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    ROWS.append(f"{name},{us_per_call:.3f},{derived}")
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def timeit(fn, n=3):
+    fn()
+    t0 = time.time()
+    for _ in range(n):
+        fn()
+    return (time.time() - t0) / n * 1e6  # us

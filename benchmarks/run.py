@@ -1,0 +1,61 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator.
+
+  fig5b  — bench_mult_ands      (64-bit multiplier AND counts)
+  fig9a  — bench_circuit_ands   (per-function AND reduction)
+  fig8a  — bench_accuracy       (private-vs-float parity)
+  fig8b  — bench_protocol       (offline/online latency stack)
+  fig10  — bench_sched          (scheduling/speculation/accelerator)
+  fig11b — bench_energy         (system energy HAAC vs APINT)
+  kernels / roofline            (unit costs, dry-run roofline table)
+"""
+
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)  # privacy plane (HE uint64)
+    print("name,us_per_call,derived")
+    from benchmarks import (
+        bench_mult_ands,
+        bench_circuit_ands,
+        bench_kernels,
+        bench_accuracy,
+        bench_protocol,
+        bench_sched,
+        bench_energy,
+        bench_roofline,
+    )
+
+    suites = [
+        ("fig5b", bench_mult_ands),
+        ("fig9a", bench_circuit_ands),
+        ("kernels", bench_kernels),
+        ("fig8a", bench_accuracy),
+        ("fig8b", bench_protocol),
+        ("fig10", bench_sched),
+        ("fig11b", bench_energy),
+        ("roofline", bench_roofline),
+    ]
+    failed = []
+    for name, mod in suites:
+        print(f"# --- {name} ({mod.__name__}) ---", flush=True)
+        try:
+            mod.main()
+        except Exception as e:  # keep the suite running
+            traceback.print_exc()
+            print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
+            failed.append(name)
+    if failed:
+        print(f"# FAILED suites: {failed}", flush=True)
+        sys.exit(1)
+    print("# all benchmark suites completed", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""APINT-on-JAX: privacy-preserving transformer inference framework.
+
+Two planes:
+  * privacy plane (``repro.core``, ``repro.sched``, ``repro.accel``,
+    ``repro.kernels``): the APINT paper's contribution — garbled-circuit
+    protocol engine, GC-friendly circuit generation, netlist scheduling and
+    the accelerator model.
+  * model plane (``repro.models``, ``repro.train``, ``repro.serve``,
+    ``repro.launch``): the transformer substrate — 10 assigned architectures,
+    pjit/shard_map distribution, training & serving at pod scale.
+"""
+
+__version__ = "1.0.0"

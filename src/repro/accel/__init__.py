@@ -1,0 +1,4 @@
+from repro.accel.sim import AccelConfig, simulate, SimResult
+from repro.accel.energy import energy_report
+
+__all__ = ["AccelConfig", "simulate", "SimResult", "energy_report"]

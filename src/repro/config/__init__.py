@@ -1,0 +1,25 @@
+from repro.config.base import (
+    ModelConfig,
+    ShapeConfig,
+    MeshConfig,
+    TrainConfig,
+    PrivacyConfig,
+    SHAPES,
+    assigned_shapes,
+    reduced_config,
+)
+from repro.config.registry import register_config, get_config, list_configs
+
+__all__ = [
+    "ModelConfig",
+    "ShapeConfig",
+    "MeshConfig",
+    "TrainConfig",
+    "PrivacyConfig",
+    "SHAPES",
+    "assigned_shapes",
+    "reduced_config",
+    "register_config",
+    "get_config",
+    "list_configs",
+]

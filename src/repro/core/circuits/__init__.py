@@ -1,0 +1,3 @@
+from repro.core.circuits.builder import CircuitBuilder, Word
+
+__all__ = ["CircuitBuilder", "Word"]

@@ -1,0 +1,152 @@
+"""Bristol Fashion netlist emit/parse [Tillich & Smart].
+
+Format:
+    <num_gates> <num_wires>
+    <n_input_values> <wires_per_value...>
+    <n_output_values> <wires_per_value...>
+    (blank)
+    2 1 <a> <b> <out> AND|XOR
+    1 1 <a> <out> INV
+
+Input value 0 = garbler inputs, value 1 = evaluator inputs, value 2
+(when present) = constant wires (the format has no constants; we emit them
+as a third input bundle and record their bits in a `# const:` header
+comment, which our parser understands and foreign parsers skip).
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from repro.core.netlist import Netlist, OP_AND, OP_INV, OP_XOR
+
+
+def emit(net: Netlist) -> str:
+    """Emit with Bristol wire numbering: inputs first, outputs last.
+
+    Gate order already carries the topology, so renumbering is a pure
+    permutation of ids.
+    """
+    outputs = [int(w) for w in net.outputs]
+    assert len(set(outputs)) == len(outputs), "duplicate output wires"
+    out_set = set(outputs)
+    in_groups = [list(map(int, net.garbler_inputs)),
+                 list(map(int, net.evaluator_inputs))]
+    const_order = sorted(net.const_bits)
+    if const_order:
+        in_groups.append(const_order)
+
+    remap = {}
+    nxt = 0
+    for g in in_groups:
+        for w in g:
+            remap[w] = nxt
+            nxt += 1
+    n_out = len(outputs)
+    tail_start = net.num_wires - n_out
+    for g in range(net.num_gates):
+        w = int(net.out[g])
+        if w not in remap and w not in out_set:
+            remap[w] = nxt
+            nxt += 1
+    for i, w in enumerate(outputs):
+        remap[w] = tail_start + i
+    # any untouched wires (dangling inputs of nothing) — fill remaining slots
+    for w in range(net.num_wires):
+        if w not in remap:
+            remap[w] = nxt
+            nxt += 1
+
+    lines: List[str] = []
+    if const_order:
+        bits = "".join(str(net.const_bits[w]) for w in const_order)
+        mapped = " ".join(str(remap[w]) for w in const_order)
+        lines.append(f"# const: {mapped} = {bits}")
+    lines.append(f"{net.num_gates} {net.num_wires}")
+    lines.append(
+        " ".join([str(len(in_groups))] + [str(len(g)) for g in in_groups])
+    )
+    lines.append(f"1 {n_out}")
+    lines.append("")
+    names = {OP_AND: "AND", OP_XOR: "XOR", OP_INV: "INV"}
+    for g in range(net.num_gates):
+        op = int(net.op[g])
+        if op == OP_INV:
+            lines.append(
+                f"1 1 {remap[int(net.in0[g])]} {remap[int(net.out[g])]} INV"
+            )
+        else:
+            lines.append(
+                f"2 1 {remap[int(net.in0[g])]} {remap[int(net.in1[g])]} "
+                f"{remap[int(net.out[g])]} {names[op]}"
+            )
+    return "\n".join(lines) + "\n"
+
+
+def parse(text: str, name: str = "") -> Netlist:
+    const_bits = {}
+    lines = []
+    for ln in text.splitlines():
+        ln = ln.strip()
+        if ln.startswith("# const:"):
+            body = ln[len("# const:"):]
+            wires_s, bits_s = body.split("=")
+            wires = [int(w) for w in wires_s.split()]
+            bits = bits_s.strip()
+            const_bits = {w: int(b) for w, b in zip(wires, bits)}
+            continue
+        if ln.startswith("#"):
+            continue
+        lines.append(ln)
+    hdr = lines[0].split()
+    num_gates, num_wires = int(hdr[0]), int(hdr[1])
+    in_hdr = list(map(int, lines[1].split()))
+    n_in_vals, in_counts = in_hdr[0], in_hdr[1:]
+    # wires are assigned to inputs first, in declaration order
+    cursor = 0
+    groups = []
+    for c in in_counts:
+        groups.append(list(range(cursor, cursor + c)))
+        cursor += c
+    g_inputs = groups[0] if len(groups) > 0 else []
+    e_inputs = groups[1] if len(groups) > 1 else []
+    if len(groups) > 2 and not const_bits:
+        const_bits = {w: 0 for w in groups[2]}
+    out_hdr = list(map(int, lines[2].split()))
+    n_out = sum(out_hdr[1:])
+
+    ops, in0, in1, out = [], [], [], []
+    for ln in lines[3:]:
+        if not ln:
+            continue
+        parts = ln.split()
+        kind = parts[-1].upper()
+        if kind == "INV" or kind == "NOT":
+            ops.append(OP_INV)
+            in0.append(int(parts[2]))
+            in1.append(int(parts[2]))
+            out.append(int(parts[3]))
+        elif kind in ("AND", "XOR"):
+            ops.append(OP_AND if kind == "AND" else OP_XOR)
+            in0.append(int(parts[2]))
+            in1.append(int(parts[3]))
+            out.append(int(parts[4]))
+        else:
+            raise ValueError(f"unsupported gate {kind}")
+    assert len(ops) == num_gates, (len(ops), num_gates)
+    # Bristol convention: outputs are the last n_out wires
+    outputs = list(range(num_wires - n_out, num_wires))
+    return Netlist(
+        num_wires=num_wires,
+        op=np.asarray(ops, np.uint8),
+        in0=np.asarray(in0, np.int32),
+        in1=np.asarray(in1, np.int32),
+        out=np.asarray(out, np.int32),
+        garbler_inputs=np.asarray(g_inputs, np.int32),
+        evaluator_inputs=np.asarray(e_inputs, np.int32),
+        outputs=np.asarray(outputs, np.int32),
+        const_bits=const_bits,
+        name=name,
+    )

@@ -1,0 +1,259 @@
+"""Level-synchronous garbling and evaluation of netlists.
+
+TPU adaptation of the paper's execution model (DESIGN.md §3): instead of 16
+MIMD cores walking a serial netlist, gates are processed one topological
+*level* at a time, vectorized across (instances × gates-in-level):
+
+    gather input labels  ->  FreeXOR / INV (xors)  ->  Half-Gate cipher
+    (kernels/halfgate)   ->  scatter output labels
+
+The paper's coarse-grained scheduling (independent softmax rows -> cores)
+becomes the leading `instances` dim, which also shards over the `data` mesh
+axis at scale. Garbled tables are produced per (instance, AND-gate).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labels as LB
+from repro.core.netlist import Netlist, OP_AND, OP_INV, OP_XOR
+from repro.kernels.halfgate import ops as HG
+from repro.kernels.halfgate import ref_np as HGNP
+
+
+@dataclass
+class GarbledCircuit:
+    """Garbler-side artifact for a batch of instances."""
+
+    net: Netlist
+    r: jnp.ndarray  # (I, 4)
+    input_zero: Dict[int, jnp.ndarray]  # wire -> (I, 4) zero-label
+    tables: jnp.ndarray  # (I, nAND, 2, 4)
+    output_perm: jnp.ndarray  # (I, n_out) color bit of the FALSE label
+    wire_zero: Optional[jnp.ndarray] = None  # (I, W, 4) if kept
+
+    @property
+    def num_instances(self) -> int:
+        return self.r.shape[0]
+
+
+def _plan(net: Netlist):
+    """Static per-level gather/scatter plans (cached on the netlist)."""
+    if getattr(net, "_gc_plan", None) is not None:
+        return net._gc_plan
+    levels = net.levels()
+    and_idx = net.and_gate_index()
+    plan = []
+    for lvl in levels:
+        ops = net.op[lvl]
+        plan.append(
+            dict(
+                gates=lvl,
+                in0=net.in0[lvl],
+                in1=net.in1[lvl],
+                out=net.out[lvl],
+                xor_idx=np.nonzero(ops == OP_XOR)[0],
+                inv_idx=np.nonzero(ops == OP_INV)[0],
+                and_idx=np.nonzero(ops == OP_AND)[0],
+                and_slot=and_idx[lvl],
+            )
+        )
+    net._gc_plan = plan  # type: ignore[attr-defined]
+    return plan
+
+
+def garble(
+    net: Netlist,
+    key,
+    instances: int = 1,
+    *,
+    impl: str = "auto",
+    keep_wires: bool = False,
+) -> GarbledCircuit:
+    """Wire store is an in-place numpy array (levels mutate O(level) rows);
+    only the Half-Gate cipher batches go through jnp/Pallas."""
+    I, W = instances, net.num_wires
+    k_r, k_w = jax.random.split(key)
+    r = np.asarray(LB.random_delta(k_r, (I,)))  # (I, 4)
+
+    wire0 = np.zeros((I, W, 4), np.uint32)
+    # fresh zero-labels for all non-gate-output wires (inputs + constants)
+    src = np.ones(W, bool)
+    src[net.out] = False
+    src_ids = np.nonzero(src)[0]
+    wire0[:, src_ids] = np.asarray(LB.random_labels(k_w, (I, len(src_ids))))
+
+    n_and = net.and_count
+    tables = np.zeros((I, max(n_and, 1), 2, 4), np.uint32)
+
+    for step in _plan(net):
+        a0 = wire0[:, step["in0"]]  # (I, L, 4)
+        b0 = wire0[:, step["in1"]]
+        out0 = np.empty_like(a0)
+        xi = step["xor_idx"]
+        vi = step["inv_idx"]
+        ai = step["and_idx"]
+        if len(xi):
+            out0[:, xi] = a0[:, xi] ^ b0[:, xi]
+        if len(vi):
+            out0[:, vi] = a0[:, vi] ^ r[:, None, :]
+        if len(ai):
+            tw = step["and_slot"][ai].astype(np.uint32)
+            if impl in ("auto", "ref"):
+                c0, tg, te = HGNP.garble_and_gates(
+                    a0[:, ai], b0[:, ai], r[:, None, :],
+                    np.broadcast_to(tw[None, :], (I, len(ai))),
+                )
+            else:
+                c0, tg, te = HG.garble_and_gates(
+                    jnp.asarray(a0[:, ai]),
+                    jnp.asarray(b0[:, ai]),
+                    jnp.asarray(r[:, None, :]),
+                    jnp.broadcast_to(jnp.asarray(tw)[None, :], (I, len(ai))),
+                    impl=impl,
+                )
+            out0[:, ai] = np.asarray(c0)
+            tables[:, step["and_slot"][ai], 0] = np.asarray(tg)
+            tables[:, step["and_slot"][ai], 1] = np.asarray(te)
+        wire0[:, step["out"]] = out0
+
+    out_perm = (
+        (wire0[:, net.outputs, 0] & 1).astype(np.uint32)
+        if len(net.outputs)
+        else np.zeros((I, 0), np.uint32)
+    )
+    in_ids = np.concatenate([
+        net.garbler_inputs, net.evaluator_inputs,
+        np.array(sorted(net.const_bits), dtype=np.int64),
+    ]).astype(np.int64) if W else np.array([], np.int64)
+    in_zero = {int(w): jnp.asarray(wire0[:, w]) for w in in_ids}
+    return GarbledCircuit(
+        net=net,
+        r=jnp.asarray(r),
+        input_zero=in_zero,
+        tables=jnp.asarray(tables),
+        output_perm=jnp.asarray(out_perm),
+        wire_zero=wire0 if keep_wires else None,
+    )
+
+
+def encode_inputs(gc: GarbledCircuit, wire_ids: Sequence[int], bits) -> jnp.ndarray:
+    """Active labels for given wires/bits. bits: (I, n) in {0,1}.
+
+    This is the garbler-side encode (and what OT delivers for evaluator
+    inputs). Returns (I, n, 4).
+    """
+    bits = jnp.asarray(bits, jnp.uint32)
+    zero = jnp.stack([gc.input_zero[int(w)] for w in wire_ids], axis=1)  # (I,n,4)
+    return LB.maybe_xor(zero, bits, gc.r[:, None, :])
+
+
+def const_labels(gc: GarbledCircuit) -> Dict[int, jnp.ndarray]:
+    """Active labels of constant wires (garbler supplies with the tables)."""
+    out = {}
+    for w, bit in gc.net.const_bits.items():
+        zero = gc.input_zero[int(w)]
+        if bit:
+            out[int(w)] = zero ^ gc.r
+        else:
+            out[int(w)] = zero
+    return out
+
+
+def evaluate(
+    net: Netlist,
+    tables: jnp.ndarray,
+    active: Dict[int, jnp.ndarray],
+    *,
+    impl: str = "auto",
+) -> jnp.ndarray:
+    """Evaluator: active labels for all input+const wires -> output labels.
+
+    active: wire -> (I, 4). Returns (I, n_out, 4).
+    """
+    some = next(iter(active.values()))
+    I = some.shape[0]
+    W = net.num_wires
+    wires = np.zeros((I, W, 4), np.uint32)
+    for w, lab in active.items():
+        wires[:, int(w)] = np.asarray(lab)
+    tables_np = np.asarray(tables)
+
+    for step in _plan(net):
+        a = wires[:, step["in0"]]
+        b = wires[:, step["in1"]]
+        out = np.empty_like(a)
+        xi, vi, ai = step["xor_idx"], step["inv_idx"], step["and_idx"]
+        if len(xi):
+            out[:, xi] = a[:, xi] ^ b[:, xi]
+        if len(vi):
+            # free: the label passes through (semantics flip garbler-side)
+            out[:, vi] = a[:, vi]
+        if len(ai):
+            slots = step["and_slot"][ai]
+            tw = slots.astype(np.uint32)
+            if impl in ("auto", "ref"):
+                c = HGNP.eval_and_gates(
+                    a[:, ai], b[:, ai],
+                    tables_np[:, slots, 0], tables_np[:, slots, 1],
+                    np.broadcast_to(tw[None, :], (I, len(ai))),
+                )
+            else:
+                c = HG.eval_and_gates(
+                    jnp.asarray(a[:, ai]),
+                    jnp.asarray(b[:, ai]),
+                    jnp.asarray(tables_np[:, slots, 0]),
+                    jnp.asarray(tables_np[:, slots, 1]),
+                    jnp.broadcast_to(jnp.asarray(tw)[None, :], (I, len(ai))),
+                    impl=impl,
+                )
+            out[:, ai] = np.asarray(c)
+        wires[:, step["out"]] = out
+    return jnp.asarray(wires[:, net.outputs])
+
+
+def decode_outputs(gc: GarbledCircuit, out_labels: jnp.ndarray) -> np.ndarray:
+    """(I, n_out, 4) active labels -> (I, n_out) bits via output permute bits."""
+    return np.asarray(LB.lsb(out_labels) ^ gc.output_perm, np.uint8)
+
+
+# ---------------------------------------------------------------------------
+# convenience: end-to-end two-party run (tests / engine)
+# ---------------------------------------------------------------------------
+
+
+def run_garbled(
+    net: Netlist,
+    key,
+    garbler_bits,
+    evaluator_bits,
+    *,
+    impl: str = "auto",
+):
+    """Full garble -> encode -> evaluate -> decode round trip.
+
+    garbler_bits: (I, len(garbler_inputs)); evaluator_bits: (I, len(eval)).
+    Returns (I, n_out) uint8 — must equal net.eval_plain(...).
+    """
+    garbler_bits = jnp.atleast_2d(jnp.asarray(garbler_bits, jnp.uint32))
+    evaluator_bits = jnp.atleast_2d(jnp.asarray(evaluator_bits, jnp.uint32))
+    I = garbler_bits.shape[0]
+    gc = garble(net, key, I, impl=impl)
+    active: Dict[int, jnp.ndarray] = {}
+    if len(net.garbler_inputs):
+        lab = encode_inputs(gc, net.garbler_inputs, garbler_bits)
+        for j, w in enumerate(net.garbler_inputs):
+            active[int(w)] = lab[:, j]
+    if len(net.evaluator_inputs):
+        lab = encode_inputs(gc, net.evaluator_inputs, evaluator_bits)  # via OT
+        for j, w in enumerate(net.evaluator_inputs):
+            active[int(w)] = lab[:, j]
+    active.update(const_labels(gc))
+    out = evaluate(net, gc.tables, active, impl=impl)
+    return decode_outputs(gc, out)

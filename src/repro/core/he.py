@@ -1,0 +1,277 @@
+"""BFV-lite: exactly the homomorphic surface the APINT protocol needs.
+
+  * RNS ciphertext modulus Q = Π q_i (NTT primes ~30 bits, jnp uint64)
+  * plaintext modulus t: prime ≡ 1 (mod 2N) -> slot batching (the plaintext
+    NTT over Z_t reuses the same butterfly code), so the protocol's
+    elementwise products (LayerNorm steps ⑧–⑪) are slot-wise
+  * enc / dec / ct+ct / ct+pt / ct×pt — no ct×ct, no relinearization
+    (the protocol never multiplies two ciphertexts)
+  * coefficient-packed matvec (Cheetah-style inner-product packing) for the
+    offline Linear(R) evaluation
+
+Security knobs are research-grade (ternary secrets, CBD errors, σ≈3.2-ish);
+parameters chosen so one plaintext multiply of full-range values keeps
+decryption exact (tests assert it).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ntt import ref as NTT
+
+
+def ensure_x64():
+    if not jax.config.read("jax_enable_x64"):
+        jax.config.update("jax_enable_x64", True)
+
+
+@dataclass(frozen=True)
+class BFVParams:
+    n: int
+    qs: Tuple[int, ...]
+    t: int
+
+    @property
+    def Q(self) -> int:
+        out = 1
+        for q in self.qs:
+            out *= q
+        return out
+
+    @functools.cached_property
+    def delta_rns(self) -> np.ndarray:
+        d = self.Q // self.t
+        return np.array([d % q for q in self.qs], dtype=np.uint64)
+
+    @functools.cached_property
+    def crt_weights(self):
+        """(Q_i_hat, inv) pairs for CRT reconstruction (python ints)."""
+        out = []
+        for q in self.qs:
+            qh = self.Q // q
+            out.append((qh, pow(qh % q, q - 2, q)))
+        return out
+
+
+def make_params(n: int = 2048, log_q: int = 30, num_primes: int = 4,
+                t_bits: int = 30) -> BFVParams:
+    ensure_x64()
+    qs = tuple(NTT.find_ntt_primes(log_q, num_primes, n))
+    # slot batching needs t ≡ 1 (mod 2n); pick a prime disjoint from qs
+    cands = NTT.find_ntt_primes(t_bits, num_primes + 2, n)
+    t = next(c for c in cands if c not in qs)
+    return BFVParams(n=n, qs=qs, t=t)
+
+
+# ---------------------------------------------------------------------------
+# sampling
+# ---------------------------------------------------------------------------
+
+
+def _ternary(key, n):
+    return jax.random.randint(key, (n,), -1, 2, dtype=jnp.int64)
+
+
+def _cbd(key, n, eta: int = 3):
+    """Centered binomial error, var = eta/2."""
+    bits = jax.random.bits(key, (2 * eta, n), dtype=jnp.uint32) & 1
+    return (
+        jnp.sum(bits[:eta].astype(jnp.int64), 0)
+        - jnp.sum(bits[eta:].astype(jnp.int64), 0)
+    )
+
+
+def _to_rns(poly_signed: jnp.ndarray, qs) -> jnp.ndarray:
+    """(n,) signed int64 -> (k, n) uint64 residues."""
+    out = []
+    for q in qs:
+        out.append(jnp.mod(poly_signed, q).astype(jnp.uint64))
+    return jnp.stack(out)
+
+
+# ---------------------------------------------------------------------------
+# keys / encrypt / decrypt
+# ---------------------------------------------------------------------------
+
+
+def keygen(params: BFVParams, key):
+    ensure_x64()
+    k_s, k_a, k_e = jax.random.split(key, 3)
+    s = _ternary(k_s, params.n)
+    a = jnp.stack(
+        [
+            jax.random.randint(jax.random.fold_in(k_a, i), (params.n,), 0, q)
+            .astype(jnp.uint64)
+            for i, q in enumerate(params.qs)
+        ]
+    )
+    e = _cbd(k_e, params.n)
+    s_rns = _to_rns(s, params.qs)
+    e_rns = _to_rns(e, params.qs)
+    b = []
+    for i, q in enumerate(params.qs):
+        as_ = NTT.negacyclic_mul(a[i], s_rns[i], q, params.n)
+        b.append((q - as_ + (q - e_rns[i])) % jnp.uint64(q))
+    pk = (jnp.stack(b), a)
+    return s, pk
+
+
+def encrypt(params: BFVParams, pk, pt_poly: jnp.ndarray, key):
+    """pt_poly: (n,) uint64 in [0, t). Returns ct = (c0, c1), each (k, n)."""
+    b, a = pk
+    k_u, k_e1, k_e2 = jax.random.split(key, 3)
+    u = _to_rns(_ternary(k_u, params.n), params.qs)
+    e1 = _to_rns(_cbd(k_e1, params.n), params.qs)
+    e2 = _to_rns(_cbd(k_e2, params.n), params.qs)
+    d = params.delta_rns
+    c0, c1 = [], []
+    for i, q in enumerate(params.qs):
+        qq = jnp.uint64(q)
+        dm = (jnp.uint64(d[i]) * (pt_poly % jnp.uint64(q))) % qq
+        bu = NTT.negacyclic_mul(b[i], u[i], q, params.n)
+        au = NTT.negacyclic_mul(a[i], u[i], q, params.n)
+        c0.append((bu + e1[i] + dm) % qq)
+        c1.append((au + e2[i]) % qq)
+    return jnp.stack(c0), jnp.stack(c1)
+
+
+def decrypt(params: BFVParams, s, ct) -> np.ndarray:
+    """Returns pt poly (n,) uint64 in [0, t). Exact CRT scaling."""
+    c0, c1 = ct
+    s_rns = _to_rns(s, params.qs)
+    phase = []
+    for i, q in enumerate(params.qs):
+        cs = NTT.negacyclic_mul(c1[i], s_rns[i], q, params.n)
+        phase.append((c0[i] + cs) % jnp.uint64(q))
+    phase = np.asarray(jnp.stack(phase))  # (k, n)
+    # CRT reconstruct to python ints, then m = round(t * c / Q) mod t
+    Q, t = params.Q, params.t
+    out = np.zeros(params.n, dtype=np.uint64)
+    weights = params.crt_weights
+    for j in range(params.n):
+        c = 0
+        for i, q in enumerate(params.qs):
+            qh, inv = weights[i]
+            c += int(phase[i, j]) * inv % q * qh
+        c %= Q
+        m = (int(c) * t + Q // 2) // Q
+        out[j] = m % t
+    return out
+
+
+# ---------------------------------------------------------------------------
+# homomorphic ops
+# ---------------------------------------------------------------------------
+
+
+def add_ct(params: BFVParams, ct_a, ct_b):
+    qs = jnp.asarray(np.array(params.qs, dtype=np.uint64))[:, None]
+    return tuple((x + y) % qs for x, y in zip(ct_a, ct_b))
+
+
+def add_plain(params: BFVParams, ct, pt_poly):
+    c0, c1 = ct
+    d = params.delta_rns
+    rows = []
+    for i, q in enumerate(params.qs):
+        qq = jnp.uint64(q)
+        rows.append((c0[i] + (jnp.uint64(d[i]) * (pt_poly % qq)) % qq) % qq)
+    return jnp.stack(rows), c1
+
+
+def mul_plain(params: BFVParams, ct, pt_poly, center: bool = True):
+    """ct × pt (negacyclic poly product per RNS prime, NTT-based).
+
+    ``center`` lifts plaintext residues to [−t/2, t/2) before reducing mod
+    each q_i: same result mod t, but noise grows with the *signed* magnitude
+    (negative fixed-point coefficients would otherwise look like ~t).
+    """
+    c0, c1 = ct
+    if center:
+        v = np.asarray(pt_poly, np.uint64).astype(np.int64)
+        v = np.where(v > params.t // 2, v - params.t, v)
+    else:
+        v = np.asarray(pt_poly, np.uint64).astype(np.int64)
+    o0, o1 = [], []
+    for i, q in enumerate(params.qs):
+        p = jnp.asarray(np.mod(v, q).astype(np.uint64))
+        o0.append(NTT.negacyclic_mul(c0[i], p, q, params.n))
+        o1.append(NTT.negacyclic_mul(c1[i], p, q, params.n))
+    return jnp.stack(o0), jnp.stack(o1)
+
+
+# ---------------------------------------------------------------------------
+# plaintext encodings
+# ---------------------------------------------------------------------------
+
+
+def encode_slots(params: BFVParams, values: np.ndarray) -> jnp.ndarray:
+    """values (n,) mod t -> poly whose slot products are elementwise."""
+    v = jnp.asarray(np.asarray(values, dtype=np.uint64) % params.t)
+    return NTT.ntt_inverse(v, params.t, params.n)
+
+
+def decode_slots(params: BFVParams, poly: np.ndarray) -> np.ndarray:
+    return np.asarray(
+        NTT.ntt_forward(jnp.asarray(poly, jnp.uint64), params.t, params.n)
+    )
+
+
+def encode_coeffs(params: BFVParams, values: np.ndarray) -> jnp.ndarray:
+    v = np.zeros(params.n, dtype=np.uint64)
+    vv = np.asarray(values, dtype=np.int64) % params.t
+    v[: len(vv)] = vv.astype(np.uint64)
+    return jnp.asarray(v)
+
+
+# ---------------------------------------------------------------------------
+# coefficient-packed matvec (Cheetah-style): offline Linear(R)
+# ---------------------------------------------------------------------------
+
+
+def matvec_plan(params: BFVParams, d_in: int, d_out: int):
+    per_ct = max(1, params.n // d_in)
+    blocks = math.ceil(d_out / per_ct)
+    return per_ct, blocks
+
+
+def he_matvec(params: BFVParams, ct_r, W: np.ndarray) -> List:
+    """Enc(r) (coeff-packed, len d_in) × W (d_out, d_in) ->
+    list of cts whose coefficient (i·d_in + d_in −1) holds ⟨W_row, r⟩."""
+    d_out, d_in = W.shape
+    per_ct, blocks = matvec_plan(params, d_in, d_out)
+    outs = []
+    for bidx in range(blocks):
+        pt = np.zeros(params.n, dtype=np.int64)
+        for slot in range(per_ct):
+            row = bidx * per_ct + slot
+            if row >= d_out:
+                break
+            # reversed row at offset slot*d_in: product coeff at
+            # slot*d_in + (d_in-1) = <W_row, r>
+            for j in range(d_in):
+                pt[slot * d_in + (d_in - 1 - j)] += int(W[row, j])
+        pt_poly = jnp.asarray(pt % params.t, jnp.uint64)
+        outs.append(mul_plain(params, ct_r, pt_poly))
+    return outs
+
+
+def he_matvec_extract(params: BFVParams, pt_polys: Sequence[np.ndarray],
+                      d_in: int, d_out: int) -> np.ndarray:
+    per_ct, _ = matvec_plan(params, d_in, d_out)
+    vals = []
+    for poly in pt_polys:
+        for slot in range(per_ct):
+            if len(vals) >= d_out:
+                break
+            vals.append(int(poly[slot * d_in + d_in - 1]))
+    return np.array(vals[:d_out], dtype=np.uint64)

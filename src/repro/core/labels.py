@@ -1,0 +1,46 @@
+"""Wire-label algebra for garbled circuits.
+
+A label is 128 bits stored as ``uint32[..., 4]``. The global FreeXOR offset R
+has its point-and-permute (color) bit — bit 0 of word 0 — forced to 1, so
+``lsb(W ^ R) != lsb(W)`` and the color bit of an active label selects garbled
+table rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LABEL_WORDS = 4
+U32 = jnp.uint32
+
+
+def random_labels(key, shape) -> jnp.ndarray:
+    """Uniform labels, shape (*shape, 4) uint32."""
+    return jax.random.bits(key, (*shape, LABEL_WORDS), dtype=U32)
+
+
+def random_delta(key, batch_shape=()) -> jnp.ndarray:
+    """FreeXOR offset R with color bit set."""
+    r = random_labels(key, batch_shape)
+    return r.at[..., 0].set(r[..., 0] | U32(1))
+
+
+def lsb(label: jnp.ndarray) -> jnp.ndarray:
+    """Color bit, uint32 {0,1}; label (..., 4) -> (...)."""
+    return label[..., 0] & U32(1)
+
+
+def xor(a, b):
+    return jnp.bitwise_xor(a, b)
+
+
+def select(cond, a, b):
+    """cond (...,) in {0,1} -> a if cond else b, label-shaped (..., 4)."""
+    return jnp.where(cond[..., None].astype(bool), a, b)
+
+
+def maybe_xor(label, cond, offset):
+    """label ^ (cond ? offset : 0)."""
+    mask = (-(cond.astype(U32)))[..., None]  # 0x0 or 0xFFFFFFFF
+    return label ^ (offset & mask)

@@ -1,0 +1,126 @@
+"""Netlist: the gate-level DAG consumed by garbling, scheduling and the
+accelerator simulator.
+
+Gate ops: 0 = XOR, 1 = AND, 2 = INV. Wires are dense ints. Constants are
+garbler-supplied input wires with recorded bits (free under garbling).
+Gates are stored in topological order (the builder emits them that way).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+OP_XOR, OP_AND, OP_INV = 0, 1, 2
+OP_NAMES = {OP_XOR: "XOR", OP_AND: "AND", OP_INV: "INV"}
+
+
+@dataclass
+class Netlist:
+    num_wires: int
+    op: np.ndarray  # (G,) uint8
+    in0: np.ndarray  # (G,) int32
+    in1: np.ndarray  # (G,) int32 (INV: == in0)
+    out: np.ndarray  # (G,) int32
+    garbler_inputs: np.ndarray  # wire ids
+    evaluator_inputs: np.ndarray
+    outputs: np.ndarray
+    const_bits: Dict[int, int] = field(default_factory=dict)  # wire -> 0/1
+    name: str = ""
+
+    # ---- stats -----------------------------------------------------------
+    @property
+    def num_gates(self) -> int:
+        return len(self.op)
+
+    @property
+    def and_count(self) -> int:
+        return int(np.sum(self.op == OP_AND))
+
+    @property
+    def xor_count(self) -> int:
+        return int(np.sum(self.op == OP_XOR))
+
+    @property
+    def inv_count(self) -> int:
+        return int(np.sum(self.op == OP_INV))
+
+    def stats(self) -> Dict:
+        lv = self.levels()
+        return {
+            "name": self.name,
+            "wires": self.num_wires,
+            "gates": self.num_gates,
+            "and": self.and_count,
+            "xor": self.xor_count,
+            "inv": self.inv_count,
+            "depth": len(lv),
+            "max_level_width": max((len(l) for l in lv), default=0),
+            "garbled_table_bytes": self.and_count * 32,  # 2 rows x 16B
+        }
+
+    # ---- levelization (TPU-plane schedule) --------------------------------
+    def levels(self) -> List[np.ndarray]:
+        """Topological layers of gate indices: every gate's inputs are
+        produced strictly earlier. This is the level-synchronous schedule the
+        TPU plane evaluates (gather -> cipher -> scatter per level)."""
+        wire_level = np.zeros(self.num_wires, np.int32)
+        gate_level = np.zeros(self.num_gates, np.int32)
+        for g in range(self.num_gates):
+            a, b = self.in0[g], self.in1[g]
+            l = wire_level[a]
+            if self.op[g] != OP_INV:
+                l = max(l, wire_level[b])
+            gate_level[g] = l + 1
+            wire_level[self.out[g]] = l + 1
+        out = []
+        if self.num_gates:
+            for lvl in range(1, int(gate_level.max()) + 1):
+                idx = np.nonzero(gate_level == lvl)[0]
+                if len(idx):
+                    out.append(idx.astype(np.int32))
+        return out
+
+    def and_gate_index(self) -> np.ndarray:
+        """Per-gate index among AND gates (for garbled-table addressing)."""
+        idx = np.cumsum(self.op == OP_AND) - 1
+        return idx.astype(np.int32)
+
+    # ---- plaintext oracle --------------------------------------------------
+    def eval_plain(self, garbler_bits: np.ndarray, evaluator_bits: np.ndarray):
+        """Vectorized plaintext evaluation.
+
+        garbler_bits: (I, len(garbler_inputs)); evaluator_bits likewise.
+        Returns (I, len(outputs)) uint8.
+        """
+        garbler_bits = np.atleast_2d(np.asarray(garbler_bits, np.uint8))
+        evaluator_bits = np.atleast_2d(np.asarray(evaluator_bits, np.uint8))
+        I = garbler_bits.shape[0]
+        w = np.zeros((I, self.num_wires), np.uint8)
+        if len(self.garbler_inputs):
+            w[:, self.garbler_inputs] = garbler_bits
+        if len(self.evaluator_inputs):
+            w[:, self.evaluator_inputs] = evaluator_bits
+        for wire, bit in self.const_bits.items():
+            w[:, wire] = bit
+        op, in0, in1, out = self.op, self.in0, self.in1, self.out
+        for g in range(self.num_gates):
+            a = w[:, in0[g]]
+            if op[g] == OP_XOR:
+                w[:, out[g]] = a ^ w[:, in1[g]]
+            elif op[g] == OP_AND:
+                w[:, out[g]] = a & w[:, in1[g]]
+            else:
+                w[:, out[g]] = a ^ 1
+        return w[:, self.outputs]
+
+
+def wire_fanout(net: Netlist) -> np.ndarray:
+    """Number of reads per wire (used by scheduling / LBUW policy)."""
+    fan = np.zeros(net.num_wires, np.int64)
+    np.add.at(fan, net.in0, 1)
+    not_inv = net.op != OP_INV
+    np.add.at(fan, net.in1[not_inv], 1)
+    return fan

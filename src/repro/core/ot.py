@@ -1,0 +1,63 @@
+"""Simulated oblivious transfer + channel accounting.
+
+Honest-but-curious simulation: both endpoints live in-process, but every
+protocol message is metered so the benchmarks reproduce the paper's
+communication columns. Cost model follows IKNP OT extension [11]: κ=128
+bits per extended OT plus the chosen 128-bit label.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+import numpy as np
+
+
+@dataclass
+class Channel:
+    client_to_server: int = 0
+    server_to_client: int = 0
+    rounds: int = 0
+    by_tag: Dict[str, int] = field(default_factory=dict)
+
+    def c2s(self, nbytes: int, tag: str = ""):
+        self.client_to_server += int(nbytes)
+        self.rounds += 1
+        if tag:
+            self.by_tag[tag] = self.by_tag.get(tag, 0) + int(nbytes)
+
+    def s2c(self, nbytes: int, tag: str = ""):
+        self.server_to_client += int(nbytes)
+        self.rounds += 1
+        if tag:
+            self.by_tag[tag] = self.by_tag.get(tag, 0) + int(nbytes)
+
+    @property
+    def total(self) -> int:
+        return self.client_to_server + self.server_to_client
+
+    def time_s(self, bandwidth_bps: float = 9.6e9, latency_s: float = 0.165e-3,
+               max_rounds: int = 0) -> float:
+        """LAN model from the paper's setup (9.6 Gb/s, 0.165 ms)."""
+        rounds = max_rounds if max_rounds else self.rounds
+        return self.total * 8 / bandwidth_bps + rounds * latency_s
+
+
+OT_BYTES_PER_TRANSFER = 2 * 16 + 16  # IKNP: 2 masked labels + correction
+
+
+def ot_labels(channel: Channel, zero_labels, r, choice_bits, tag="ot"):
+    """Evaluator obtains labels for its choice bits; garbler learns nothing.
+
+    zero_labels: (..., 4) uint32; r: broadcastable; choice_bits (...,).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import labels as LB
+
+    n = int(np.prod(choice_bits.shape))
+    channel.c2s(n * 16, tag)  # receiver's OT messages
+    channel.s2c(n * OT_BYTES_PER_TRANSFER, tag)
+    bits = jnp.asarray(choice_bits, jnp.uint32)
+    return LB.maybe_xor(zero_labels, bits, r)

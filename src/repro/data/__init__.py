@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticLMData, ByteTokenizer
+
+__all__ = ["SyntheticLMData", "ByteTokenizer"]

@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the privacy plane's compute hot spots.
+
+Each kernel ships as a triplet:
+  <name>/<name>.py — pl.pallas_call with explicit BlockSpec VMEM tiling
+  <name>/ops.py    — jit'd dispatch wrapper (pallas on TPU / interpret on CPU,
+                     jnp reference fallback)
+  <name>/ref.py    — pure-jnp oracle used by tests and as the CPU path
+
+Kernels:
+  halfgate     — fixed-key ARX cipher Half-Gate garble/eval (GC hot loop)
+  ntt          — negacyclic NTT for BFV-lite (small-prime RNS limbs)
+  label_select — bit-plane -> active-label encode (protocol input garbling)
+  level_eval   — fused XOR/INV/Half-Gate evaluation of a whole netlist level
+"""

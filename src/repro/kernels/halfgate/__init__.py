@@ -1,0 +1,7 @@
+from repro.kernels.halfgate.ops import (
+    hash_labels,
+    garble_and_gates,
+    eval_and_gates,
+)
+
+__all__ = ["hash_labels", "garble_and_gates", "eval_and_gates"]

@@ -1,0 +1,62 @@
+"""Dispatch wrapper: Pallas on TPU, jnp reference elsewhere.
+
+``impl``: "auto" | "ref" | "pallas" | "pallas_interpret".
+The interpret path executes the kernel body in Python on CPU — used by the
+test-suite shape/dtype sweeps to validate the kernel against the oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.halfgate import ref as _ref
+from repro.kernels.halfgate import halfgate as _pk
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def hash_labels(labels, tweaks):
+    return _ref.hash_labels(labels, tweaks)
+
+
+def garble_and_gates(a0, b0, r, tweaks, impl: str = "auto"):
+    """a0,b0 (..., 4); r broadcastable; tweaks (...,). Flattens to the
+    kernel's (G, 4) layout and restores the caller's shape."""
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.garble_and_gates(a0, b0, r, tweaks)
+    lead = a0.shape[:-1]
+    a0f = a0.reshape(-1, 4)
+    b0f = b0.reshape(-1, 4)
+    rb = jnp.broadcast_to(r, (*lead, 4)).reshape(-1, 4)
+    twf = jnp.broadcast_to(tweaks, lead).reshape(-1).astype(jnp.uint32)
+    c0, tg, te = _pk.garble_pallas(
+        a0f, b0f, rb, twf, interpret=(impl == "pallas_interpret")
+    )
+    return (
+        c0.reshape(*lead, 4),
+        tg.reshape(*lead, 4),
+        te.reshape(*lead, 4),
+    )
+
+
+def eval_and_gates(a, b, tg, te, tweaks, impl: str = "auto"):
+    impl = _resolve(impl)
+    if impl == "ref":
+        return _ref.eval_and_gates(a, b, tg, te, tweaks)
+    lead = a.shape[:-1]
+    twf = jnp.broadcast_to(tweaks, lead).reshape(-1).astype(jnp.uint32)
+    c = _pk.eval_pallas(
+        a.reshape(-1, 4),
+        b.reshape(-1, 4),
+        tg.reshape(-1, 4),
+        te.reshape(-1, 4),
+        twf,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return c.reshape(*lead, 4)

@@ -1,0 +1,104 @@
+"""Pure-jnp oracle for the Half-Gate cipher kernel.
+
+Hash: Davies–Meyer over a 128-bit ARX permutation (SipRound-style on four
+32-bit lanes, 8 rounds, round constants). TPU adaptation of the paper's
+fixed-key AES (TPUs have no AES-NI; GC only needs a circular-correlation-
+robust hash — see DESIGN.md §3). The permutation is pluggable; production
+would swap in AES.
+
+Half-Gate (Zahur–Rosulek–Evans, "two halves make a whole"):
+  garbling an AND gate costs 4 hash calls and emits 2 table rows;
+  evaluation costs 2 hash calls — matching the paper's cost model.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+# python-int round constants: they embed as immediates so the Pallas kernel
+# body captures no arrays
+_RC = (0x9E3779B9, 0x85EBCA6B, 0xC2B2AE35, 0x27D4EB2F,
+       0x165667B1, 0xD3A2646C, 0xFD7046C5, 0xB55A4F09)
+
+NUM_ROUNDS = 8
+
+
+def _rotl(x, r):
+    return (x << U32(r)) | (x >> U32(32 - r))
+
+
+def arx_perm(x):
+    """x: (..., 4) uint32 -> permuted (..., 4)."""
+    v0, v1, v2, v3 = x[..., 0], x[..., 1], x[..., 2], x[..., 3]
+    for r in range(NUM_ROUNDS):
+        v0 = v0 + v1 + U32(_RC[r])
+        v1 = _rotl(v1, 13) ^ v0
+        v2 = v2 + v3
+        v3 = _rotl(v3, 16) ^ v2
+        v0 = v0 + v3
+        v3 = _rotl(v3, 21) ^ v0
+        v2 = v2 + v1
+        v1 = _rotl(v1, 17) ^ v2
+    return jnp.stack([v0, v1, v2, v3], axis=-1)
+
+
+def expand_tweak(tweak):
+    """tweak (...,) uint32 gate counter -> (..., 4) uint32 block."""
+    t = tweak.astype(U32)
+    return jnp.stack(
+        [t, t ^ U32(0x9E3779B9), ~t, t + U32(0x85EBCA6B)], axis=-1
+    )
+
+
+def hash_labels(labels, tweaks):
+    """H(x, t) = P(x ⊕ t̂) ⊕ (x ⊕ t̂). labels (..., 4); tweaks (...,)."""
+    xin = labels ^ expand_tweak(tweaks)
+    return arx_perm(xin) ^ xin
+
+
+def _lsb_mask(label):
+    """(..., 1) uint32 0x0/0xFFFFFFFF from the color bit."""
+    return (-(label[..., 0:1] & U32(1))).astype(U32)
+
+
+def garble_and_gates(a0, b0, r, tweaks):
+    """Vectorized Half-Gate garbling.
+
+    a0, b0: (..., 4) zero-labels of the two inputs; r broadcastable (..., 4);
+    tweaks (...,) uint32 per-gate counter (two tweaks derived as 2t, 2t+1).
+    Returns (c0, tg, te): output zero-label + the two garbled table rows.
+    """
+    t1 = tweaks * jnp.uint32(2)
+    t2 = t1 + jnp.uint32(1)
+    a1 = a0 ^ r
+    b1 = b0 ^ r
+    ha0 = hash_labels(a0, t1)
+    ha1 = hash_labels(a1, t1)
+    hb0 = hash_labels(b0, t2)
+    hb1 = hash_labels(b1, t2)
+    pa = _lsb_mask(a0)
+    pb = _lsb_mask(b0)
+    tg = ha0 ^ ha1 ^ (r & pb)
+    wg = ha0 ^ (tg & pa)
+    te = hb0 ^ hb1 ^ a0
+    we = hb0 ^ ((te ^ a0) & pb)
+    c0 = wg ^ we
+    return c0, tg, te
+
+
+def eval_and_gates(a, b, tg, te, tweaks):
+    """Vectorized Half-Gate evaluation: 2 hash calls per gate.
+
+    a, b: active labels (..., 4); tg/te: table rows; tweaks as in garbling.
+    """
+    t1 = tweaks * jnp.uint32(2)
+    t2 = t1 + jnp.uint32(1)
+    ha = hash_labels(a, t1)
+    hb = hash_labels(b, t2)
+    sa = _lsb_mask(a)
+    sb = _lsb_mask(b)
+    wg = ha ^ (tg & sa)
+    we = hb ^ ((te ^ a) & sb)
+    return wg ^ we

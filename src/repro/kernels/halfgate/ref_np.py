@@ -1,0 +1,77 @@
+"""Numpy mirror of ref.py — the CPU fast path for the level-synchronous
+garbling loops (no per-op dispatch overhead). Bit-identical to the jnp
+oracle (tests assert it)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.kernels.halfgate.ref import _RC, NUM_ROUNDS
+
+U32 = np.uint32
+_RC_NP = np.asarray(_RC, dtype=np.uint32)
+# note: ref._RC is a tuple of python ints; both backends share it
+
+
+def _rotl(x, r):
+    return ((x << U32(r)) | (x >> U32(32 - r))).astype(np.uint32)
+
+
+def arx_perm(x):
+    v0, v1, v2, v3 = (x[..., i].copy() for i in range(4))
+    for r in range(NUM_ROUNDS):
+        v0 += v1 + _RC_NP[r]
+        v1 = _rotl(v1, 13) ^ v0
+        v2 += v3
+        v3 = _rotl(v3, 16) ^ v2
+        v0 += v3
+        v3 = _rotl(v3, 21) ^ v0
+        v2 += v1
+        v1 = _rotl(v1, 17) ^ v2
+    return np.stack([v0, v1, v2, v3], axis=-1)
+
+
+def expand_tweak(tweak):
+    t = tweak.astype(np.uint32)
+    return np.stack(
+        [t, t ^ U32(0x9E3779B9), ~t, t + U32(0x85EBCA6B)], axis=-1
+    )
+
+
+def hash_labels(labels, tweaks):
+    xin = labels ^ expand_tweak(tweaks)
+    return arx_perm(xin) ^ xin
+
+
+def _lsb_mask(label):
+    return (-(label[..., 0:1] & U32(1))).astype(np.uint32)
+
+
+def garble_and_gates(a0, b0, r, tweaks):
+    t1 = tweaks.astype(np.uint32) * U32(2)
+    t2 = t1 + U32(1)
+    a1 = a0 ^ r
+    b1 = b0 ^ r
+    ha0 = hash_labels(a0, t1)
+    ha1 = hash_labels(a1, t1)
+    hb0 = hash_labels(b0, t2)
+    hb1 = hash_labels(b1, t2)
+    pa = _lsb_mask(a0)
+    pb = _lsb_mask(b0)
+    tg = ha0 ^ ha1 ^ (r & pb)
+    wg = ha0 ^ (tg & pa)
+    te = hb0 ^ hb1 ^ a0
+    we = hb0 ^ ((te ^ a0) & pb)
+    return wg ^ we, tg, te
+
+
+def eval_and_gates(a, b, tg, te, tweaks):
+    t1 = tweaks.astype(np.uint32) * U32(2)
+    t2 = t1 + U32(1)
+    ha = hash_labels(a, t1)
+    hb = hash_labels(b, t2)
+    sa = _lsb_mask(a)
+    sb = _lsb_mask(b)
+    wg = ha ^ (tg & sa)
+    we = hb ^ ((te ^ a) & sb)
+    return wg ^ we

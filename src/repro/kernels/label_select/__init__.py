@@ -1,0 +1,3 @@
+from repro.kernels.label_select.ops import select_labels
+
+__all__ = ["select_labels"]

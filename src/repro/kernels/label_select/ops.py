@@ -1,0 +1,24 @@
+"""Dispatch wrapper for the label_select kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.label_select import ref as _ref
+from repro.kernels.label_select.label_select import select_labels_pallas
+
+
+def select_labels(zero_labels, r, bits, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.select_labels(zero_labels, r, bits)
+    lead = zero_labels.shape[:-1]
+    rb = jnp.broadcast_to(r, (*lead, 4)).reshape(-1, 4)
+    out = select_labels_pallas(
+        zero_labels.reshape(-1, 4), rb,
+        bits.reshape(-1).astype(jnp.uint32),
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out.reshape(*lead, 4)

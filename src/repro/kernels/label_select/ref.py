@@ -1,0 +1,25 @@
+"""jnp oracle: active-label encode  W = W0 ^ (bit ? R : 0).
+
+This is the protocol's input-garbling hot path: every fixed-point tensor
+entering GC is bit-decomposed (k bits/element × instances) and each bit
+selects a label. Pure bandwidth — the kernel's job is to keep it at HBM
+speed on (G, 4) uint32 tiles.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+U32 = jnp.uint32
+
+
+def select_labels(zero_labels, r, bits):
+    """zero_labels (..., 4); r broadcastable (..., 4); bits (...,) {0,1}."""
+    mask = (-(bits.astype(U32)))[..., None]
+    return zero_labels ^ (r & mask)
+
+
+def bit_decompose(values, k: int):
+    """(...,) uint -> (..., k) uint32 LSB-first bits."""
+    shifts = jnp.arange(k, dtype=values.dtype)
+    return ((values[..., None] >> shifts) & values.dtype.type(1)).astype(U32)

@@ -1,0 +1,3 @@
+from repro.kernels.level_eval.ops import eval_level
+
+__all__ = ["eval_level"]

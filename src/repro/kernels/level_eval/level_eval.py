@@ -1,0 +1,67 @@
+"""Pallas TPU kernel: fused level-synchronous GC evaluation.
+
+One launch per netlist level: every gate of the level streams through VMEM
+in (BLOCK, 4) label tiles together with its table rows and an op code; the
+kernel computes FreeXOR and Half-Gate lanes branch-free and selects by op.
+Compared with dispatching separate XOR / AND batches this halves the DMA
+passes over the level and removes the gather/scatter between them — the
+TPU counterpart of the paper's single pipelined PE that co-issues
+Half-Gate (18 cy) and FreeXOR (1 cy) units.
+
+Grid streams gate blocks (double-buffered); all operands are sequential so
+the DMA engine prefetches block i+1 during the cipher of block i — the
+OoRW-prefetch idea at the DMA level (DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.level_eval import ref
+
+DEFAULT_BLOCK = 2048
+U32 = jnp.uint32
+
+
+def _kernel(ops_ref, a_ref, b_ref, tg_ref, te_ref, tw_ref, out_ref):
+    ops = ops_ref[...][:, 0]
+    tw = tw_ref[...][:, 0]
+    out_ref[...] = ref.eval_level(
+        ops, a_ref[...], b_ref[...], tg_ref[...], te_ref[...], tw
+    )
+
+
+def _pad(x, block):
+    g = x.shape[0]
+    p = (-g) % block
+    if p:
+        x = jnp.concatenate([x, jnp.zeros((p, *x.shape[1:]), x.dtype)])
+    return x
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def eval_level_pallas(ops, a, b, tg, te, tweaks, *, block=DEFAULT_BLOCK,
+                      interpret=False):
+    """ops (G,); a/b/tg/te (G,4); tweaks (G,). -> (G,4) uint32."""
+    g = a.shape[0]
+    blk = min(block, max(8, 1 << (g - 1).bit_length()))
+    opsp = _pad(ops.reshape(-1, 1).astype(U32), blk)
+    ap, bp = _pad(a, blk), _pad(b, blk)
+    tgp, tep = _pad(tg, blk), _pad(te, blk)
+    twp = _pad(tweaks.reshape(-1, 1).astype(U32), blk)
+    gp = ap.shape[0]
+    lab = lambda: pl.BlockSpec((blk, 4), lambda i: (i, 0))
+    col = lambda: pl.BlockSpec((blk, 1), lambda i: (i, 0))
+    out = pl.pallas_call(
+        _kernel,
+        grid=(gp // blk,),
+        in_specs=[col(), lab(), lab(), lab(), lab(), col()],
+        out_specs=lab(),
+        out_shape=jax.ShapeDtypeStruct((gp, 4), U32),
+        interpret=interpret,
+    )(opsp, ap, bp, tgp, tep, twp)
+    return out[:g]

@@ -1,0 +1,17 @@
+"""Dispatch wrapper for the fused level evaluator."""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.level_eval import ref as _ref
+from repro.kernels.level_eval.level_eval import eval_level_pallas
+
+
+def eval_level(ops, a, b, tg, te, tweaks, impl: str = "auto"):
+    if impl == "auto":
+        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if impl == "ref":
+        return _ref.eval_level(ops, a, b, tg, te, tweaks)
+    return eval_level_pallas(ops, a, b, tg, te, tweaks,
+                             interpret=(impl == "pallas_interpret"))

@@ -1,0 +1,29 @@
+"""jnp oracle: evaluate one topological netlist level in a single pass.
+
+Per gate (op ∈ {0:XOR, 1:AND, 2:INV}):
+    XOR -> a ^ b              (FreeXOR)
+    AND -> HalfGate(a, b, tables, tweak)
+    INV -> a                  (label passes through; semantics flip
+                               garbler-side)
+Computing the Half-Gate for every lane and masking is branch-free — the
+right shape for the VPU (the paper's PE co-issues Half-Gate and FreeXOR
+units; a SIMD machine evaluates both and selects).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.kernels.halfgate import ref as HG
+
+U32 = jnp.uint32
+
+
+def eval_level(ops, a, b, tg, te, tweaks):
+    """ops (G,) uint32; labels/tables (G, 4); tweaks (G,). -> (G, 4)."""
+    and_out = HG.eval_and_gates(a, b, tg, te, tweaks)
+    xor_out = a ^ b
+    is_and = (ops == U32(1))[:, None]
+    is_inv = (ops == U32(2))[:, None]
+    out = jnp.where(is_and, and_out, xor_out)
+    return jnp.where(is_inv, a, out)

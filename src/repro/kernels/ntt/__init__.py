@@ -1,0 +1,3 @@
+from repro.kernels.ntt.ops import ntt_forward, ntt_inverse, negacyclic_mul
+
+__all__ = ["ntt_forward", "ntt_inverse", "negacyclic_mul"]

@@ -1,0 +1,52 @@
+"""Dispatch wrapper for the NTT kernel.
+
+``impl``: "auto" | "ref" | "pallas" | "pallas_interpret".
+
+The Pallas path targets RNS limb primes < 2^15 (products fit int32 exactly
+on the TPU VPU — the standard HE-on-accelerator limb decomposition); the
+jnp/uint64 reference handles the ~30-bit primes BFV-lite uses on CPU.
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ntt import ref as _ref
+
+
+def _resolve(impl: str, q: int) -> str:
+    if impl == "auto":
+        if jax.default_backend() == "tpu" and q < (1 << 15):
+            return "pallas"
+        return "ref"
+    return impl
+
+
+def ntt_forward(a, q: int, n: int, impl: str = "auto"):
+    impl = _resolve(impl, q)
+    if impl == "ref":
+        return _ref.ntt_forward(a, q, n)
+    from repro.kernels.ntt.ntt import ntt_pallas
+
+    return ntt_pallas(a, q, n, inverse=False,
+                      interpret=(impl == "pallas_interpret"))
+
+
+def ntt_inverse(a, q: int, n: int, impl: str = "auto"):
+    impl = _resolve(impl, q)
+    if impl == "ref":
+        return _ref.ntt_inverse(a, q, n)
+    from repro.kernels.ntt.ntt import ntt_pallas
+
+    return ntt_pallas(a, q, n, inverse=True,
+                      interpret=(impl == "pallas_interpret"))
+
+
+def negacyclic_mul(a, b, q: int, n: int, impl: str = "auto"):
+    impl = _resolve(impl, q)
+    if impl == "ref":
+        return _ref.negacyclic_mul(a, b, q, n)
+    fa = ntt_forward(a, q, n, impl)
+    fb = ntt_forward(b, q, n, impl)
+    prod = (fa.astype("int64") * fb.astype("int64")) % q  # host-side combine
+    return ntt_inverse(prod.astype(a.dtype), q, n, impl)

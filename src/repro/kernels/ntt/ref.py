@@ -1,0 +1,183 @@
+"""Negacyclic NTT over Z_q[X]/(X^N+1) — pure-jnp oracle (uint64 lanes).
+
+Longa–Naehrig iterative butterflies with merged psi powers (bit-reversed
+tables), so forward/inverse need no separate pre/post twisting. Requires
+q ≡ 1 (mod 2N) and q < 2^31 so products fit in uint64 without reduction
+tricks (the privacy plane enables x64).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# parameter search (host-side, python ints)
+# ---------------------------------------------------------------------------
+
+
+def _is_prime(n: int) -> bool:
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n % p == 0:
+            return n == p
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def find_ntt_primes(bits: int, count: int, n: int,
+                    max_q: Optional[int] = None) -> list:
+    """`count` primes q ≡ 1 (mod 2n) just below min(2^bits, max_q)."""
+    out = []
+    step = 2 * n
+    hi = (1 << bits) - 1
+    if max_q is not None:
+        hi = min(hi, max_q)
+    q = hi // step * step + 1
+    if q > hi:
+        q -= step
+    while len(out) < count and q > 2 * n:
+        if _is_prime(q):
+            out.append(q)
+        q -= step
+    assert len(out) == count, f"not enough {bits}-bit NTT primes for N={n}"
+    return out
+
+
+INT32_PRODUCT_BOUND = 46340  # q^2 < 2^31: exact int32 butterfly products
+
+
+def find_primitive_root(q: int, order: int) -> int:
+    """An element of exact multiplicative order `order` mod prime q."""
+    assert (q - 1) % order == 0
+    for g in range(2, 10000):
+        x = pow(g, (q - 1) // order, q)
+        if pow(x, order // 2, q) != 1:  # order does not divide order/2
+            return x
+    raise RuntimeError("no root found")
+
+
+def _bit_reverse(x: np.ndarray, bits: int) -> np.ndarray:
+    out = np.zeros_like(x)
+    for i in range(bits):
+        out = (out << 1) | ((x >> i) & 1)
+    return out
+
+
+@functools.lru_cache(maxsize=64)
+def ntt_tables(q: int, n: int) -> Tuple[np.ndarray, np.ndarray, int]:
+    """(psi_br, ipsi_br, n_inv): bit-reversed powers of psi (2n-th root)."""
+    psi = find_primitive_root(q, 2 * n)
+    assert pow(psi, n, q) == q - 1  # psi^n = -1 (negacyclic)
+    bits = n.bit_length() - 1
+    idx = np.arange(n, dtype=np.int64)
+    br = _bit_reverse(idx, bits)
+    powers = np.array([pow(psi, int(i), q) for i in range(n)], dtype=np.uint64)
+    ipowers = np.array(
+        [pow(psi, (-int(i)) % (2 * n), q) for i in range(n)], dtype=np.uint64
+    )
+    n_inv = pow(n, q - 2, q)
+    return powers[br], ipowers[br], n_inv
+
+
+# ---------------------------------------------------------------------------
+# jnp butterflies
+# ---------------------------------------------------------------------------
+
+
+def _mulmod(a, b, q):
+    return (a * b) % jnp.uint64(q)
+
+
+def _addmod(a, b, q):
+    s = a + b
+    return jnp.where(s >= jnp.uint64(q), s - jnp.uint64(q), s)
+
+
+def _submod(a, b, q):
+    return jnp.where(a >= b, a - b, a + jnp.uint64(q) - b)
+
+
+def ntt_forward(a: jnp.ndarray, q: int, n: int) -> jnp.ndarray:
+    """a: (..., N) uint64 coefficients -> NTT domain (bit-reversed order)."""
+    psi_br, _, _ = ntt_tables(q, n)
+    psi_br = jnp.asarray(psi_br)
+    batch = a.shape[:-1]
+    t = n
+    m = 1
+    while m < n:
+        t //= 2
+        a = a.reshape(*batch, m, 2 * t)
+        u = a[..., :t]
+        v = a[..., t:]
+        s = psi_br[m : 2 * m]  # (m,)
+        v = _mulmod(v, s[:, None], q)
+        a = jnp.concatenate([_addmod(u, v, q), _submod(u, v, q)], axis=-1)
+        m *= 2
+    return a.reshape(*batch, n)
+
+
+def ntt_inverse(a: jnp.ndarray, q: int, n: int) -> jnp.ndarray:
+    _, ipsi_br, n_inv = ntt_tables(q, n)
+    ipsi_br = jnp.asarray(ipsi_br)
+    batch = a.shape[:-1]
+    t = 1
+    m = n
+    while m > 1:
+        h = m // 2
+        a = a.reshape(*batch, h, 2 * t)
+        u = a[..., :t]
+        v = a[..., t:]
+        s = ipsi_br[h : 2 * h]  # (h,)
+        nu = _addmod(u, v, q)
+        nv = _mulmod(_submod(u, v, q), s[:, None], q)
+        a = jnp.concatenate([nu, nv], axis=-1)
+        t *= 2
+        m = h
+    a = a.reshape(*batch, n)
+    return _mulmod(a, jnp.uint64(n_inv), q)
+
+
+def negacyclic_mul(a: jnp.ndarray, b: jnp.ndarray, q: int, n: int) -> jnp.ndarray:
+    """a * b mod (X^N + 1, q) via NTT -> pointwise -> INTT."""
+    fa = ntt_forward(a, q, n)
+    fb = ntt_forward(b, q, n)
+    return ntt_inverse(_mulmod(fa, fb, q), q, n)
+
+
+def negacyclic_mul_naive(a: np.ndarray, b: np.ndarray, q: int, n: int) -> np.ndarray:
+    """O(N^2) oracle for tests (python ints, no overflow)."""
+    a = np.asarray(a, dtype=object)
+    b = np.asarray(b, dtype=object)
+    out = np.zeros(n, dtype=object)
+    for i in range(n):
+        if int(a[i]) == 0:
+            continue
+        for j in range(n):
+            k = i + j
+            v = int(a[i]) * int(b[j])
+            if k >= n:
+                out[k - n] = (out[k - n] - v) % q
+            else:
+                out[k] = (out[k] + v) % q
+    return out.astype(np.uint64)

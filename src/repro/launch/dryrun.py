@@ -1,0 +1,250 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The two lines above run before any other import (jax locks the device count
+on first init). Usage:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch olmoe-1b-7b \
+        --shape train_4k [--multi-pod] [--out experiments/dryrun]
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Each cell emits a JSON record with memory analysis, cost analysis
+(FLOPs/bytes), the per-kind collective byte breakdown parsed from the
+optimized HLO, and the three-term roofline (§Roofline in EXPERIMENTS.md).
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.config import (  # noqa: E402
+    SHAPES,
+    TrainConfig,
+    assigned_shapes,
+    get_config,
+    list_configs,
+)
+from repro.config.base import SHAPES_BY_NAME  # noqa: E402
+from repro.launch import specs as SP  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch.steps import (  # noqa: E402
+    abstract_state,
+    build_decode_step,
+    build_prefill_step,
+    build_train_step,
+    state_shardings,
+)
+from repro.roofline.analysis import (  # noqa: E402
+    HW,
+    model_flops,
+    parse_collectives,
+    roofline_terms,
+)
+from repro.roofline.hlo_costs import analyze_hlo  # noqa: E402
+from repro.roofline.analytic import traffic as analytic_traffic  # noqa: E402
+
+ASSIGNED = [
+    "olmoe-1b-7b",
+    "llama4-scout-17b-a16e",
+    "llama3.2-1b",
+    "deepseek-67b",
+    "qwen3-1.7b",
+    "smollm-360m",
+    "musicgen-medium",
+    "xlstm-125m",
+    "zamba2-2.7b",
+    "internvl2-26b",
+]
+
+# gradient-accumulation factors for the train_4k cells sized so the
+# per-device live set fits 16 GiB HBM on the 256-chip pod (see
+# EXPERIMENTS.md §Dry-run memory notes)
+TRAIN_MICROBATCHES = {
+    "deepseek-67b": 8,
+    "llama4-scout-17b-a16e": 4,
+    "internvl2-26b": 4,
+    "zamba2-2.7b": 4,
+    "olmoe-1b-7b": 2,
+    "xlstm-125m": 2,
+    "musicgen-medium": 2,
+}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool):
+    """Returns (lowered, compiled, meta) for one cell."""
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    tc = TrainConfig(microbatches=TRAIN_MICROBATCHES.get(arch, 1))
+
+    if shape.kind == "train":
+        fn, in_sh, out_sh, rules = build_train_step(cfg, tc, mesh, shape)
+        state = abstract_state(cfg, tc)
+        args = (state, SP.batch_struct(cfg, shape))
+    elif shape.kind == "prefill":
+        from repro.launch.steps import serve_param_struct
+
+        fn, in_sh, out_sh, rules = build_prefill_step(cfg, mesh, shape)
+        args = (serve_param_struct(cfg), SP.batch_struct(cfg, shape))
+    else:  # decode
+        from repro.launch.steps import serve_param_struct
+
+        fn, in_sh, out_sh, rules = build_decode_step(cfg, mesh, shape)
+        args = (serve_param_struct(cfg), SP.batch_struct(cfg, shape),
+                SP.cache_struct(cfg, shape))
+
+    # donation: the train state and decode caches are updated in place on a
+    # real system — aliasing removes the full-buffer copy from DUS/opt update
+    donate = ()
+    if shape.kind == "train":
+        donate = (0,)
+    elif shape.kind == "decode":
+        donate = (2,)
+    with mesh:
+        jitted = jax.jit(
+            fn, in_shardings=in_sh, out_shardings=out_sh, donate_argnums=donate
+        )
+        t0 = time.time()
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+    meta = {
+        "lower_s": t1 - t0,
+        "compile_s": t2 - t1,
+        "num_devices": mesh.devices.size,
+        "mesh_shape": list(mesh.devices.shape),
+        "mesh_axes": list(mesh.axis_names),
+    }
+    return lowered, compiled, meta
+
+
+def analyze(compiled, num_devices: int, cfg, shape) -> dict:
+    rec = {}
+    try:
+        cost = compiled.cost_analysis()
+        if isinstance(cost, list):
+            cost = cost[0]
+        rec["flops_per_device"] = float(cost.get("flops", 0.0))
+        rec["bytes_per_device"] = float(cost.get("bytes accessed", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_error"] = repr(e)
+        rec["flops_per_device"] = 0.0
+        rec["bytes_per_device"] = 0.0
+    try:
+        mem = compiled.memory_analysis()
+        for k in (
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "temp_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            if hasattr(mem, k):
+                rec.setdefault("memory", {})[k] = int(getattr(mem, k))
+    except Exception as e:  # pragma: no cover
+        rec["memory_error"] = repr(e)
+    hlo = compiled.as_text()
+    coll = parse_collectives(hlo)
+    rec["collectives_raw"] = coll  # body-once (cost_analysis convention)
+    # trip-count-corrected accounting (scan bodies × known_trip_count)
+    corr = analyze_hlo(hlo)
+    rec["corrected"] = {
+        "dot_flops_per_device": corr["dot_flops"],
+        "traffic_bytes_per_device": corr["traffic_bytes"],
+        "collectives": corr["collectives"],
+        "num_whiles": corr["num_whiles"],
+    }
+    wire = corr["collectives"]["total"]["wire_bytes"]
+    # memory term: analytic model with true dtypes (the CPU backend
+    # emulates bf16 in f32, inflating HLO-derived bytes up to 2x — see
+    # roofline/analytic.py); HLO traffic kept as the upper bound.
+    ana = analytic_traffic(
+        cfg, shape, multi_pod=num_devices > 256,
+        microbatches=TRAIN_MICROBATCHES.get(cfg.name, 1),
+    )
+    rec["analytic_traffic"] = ana
+    rec["roofline"] = roofline_terms(
+        corr["dot_flops"], ana["total"], wire
+    )
+    rec["roofline_hlo_upper"] = roofline_terms(
+        corr["dot_flops"], corr["traffic_bytes"], wire
+    )
+    mf = model_flops(cfg, shape)
+    rec["model_flops_global"] = mf
+    hlo_global = corr["dot_flops"] * num_devices
+    rec["hlo_flops_global"] = hlo_global
+    rec["model_to_hlo_flops"] = mf / hlo_global if hlo_global else 0.0
+    rec["hlo_ops"] = {
+        "while": hlo.count(" while("),
+        "fusion": hlo.count(" fusion("),
+        "dus": hlo.count("dynamic-update-slice"),
+    }
+    return rec
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, outdir: str) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec = {
+        "arch": arch,
+        "shape": shape_name,
+        "kind": shape.kind,
+        "multi_pod": multi_pod,
+        "ok": False,
+    }
+    try:
+        lowered, compiled, meta = lower_cell(arch, shape_name, multi_pod)
+        rec.update(meta)
+        rec.update(analyze(compiled, meta["num_devices"], cfg, shape))
+        rec["ok"] = True
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-4000:]
+    if outdir:
+        os.makedirs(outdir, exist_ok=True)
+        tag = "multipod" if multi_pod else "pod"
+        path = os.path.join(
+            outdir, f"{arch.replace('/', '_')}__{shape_name}__{tag}.json"
+        )
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, default=str)
+    status = "OK" if rec["ok"] else f"FAIL ({rec.get('error', '?')})"
+    print(
+        f"[dryrun] {arch} x {shape_name} x "
+        f"{'2x16x16' if multi_pod else '16x16'}: {status}",
+        flush=True,
+    )
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    if args.all:
+        ok = True
+        for arch in ASSIGNED:
+            cfg = get_config(arch)
+            for shape in assigned_shapes(cfg):
+                rec = run_cell(arch, shape.name, args.multi_pod, args.out)
+                ok &= rec["ok"]
+        raise SystemExit(0 if ok else 1)
+
+    assert args.arch and args.shape, "--arch and --shape (or --all)"
+    rec = run_cell(args.arch, args.shape, args.multi_pod, args.out)
+    raise SystemExit(0 if rec["ok"] else 1)
+
+
+if __name__ == "__main__":
+    main()

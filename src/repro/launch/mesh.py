@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state. Single pod: (data=16, model=16) = 256 chips.
+Multi-pod: (pod=2, data=16, model=16) = 512 chips; the `pod` axis carries
+only data-parallel all-reduces (lowest inter-pod bandwidth demand).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = math.prod(shape)
+    if len(jax.devices()) == n:
+        return jax.make_mesh(shape, axes)
+    if len(jax.devices()) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(jax.devices())} — "
+            "set XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)"
+        )
+    devs = np.array(jax.devices()[:n]).reshape(shape)
+    return jax.sharding.Mesh(devs, axes)
+
+
+def make_host_mesh():
+    """Whatever mesh the current process supports (elastic restart helper):
+    prefers (data=N/16, model=16), falls back to (data=N, model=1)."""
+    n = len(jax.devices())
+    if n % 16 == 0 and n >= 16:
+        shape = (n // 16, 16)
+    else:
+        shape = (n, 1)
+    devs = np.array(jax.devices()[: shape[0] * shape[1]]).reshape(shape)
+    return jax.sharding.Mesh(devs, ("data", "model"))

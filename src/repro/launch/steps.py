@@ -1,0 +1,220 @@
+"""Step builders: train_step / prefill_step / decode_step.
+
+Each builder returns ``(fn, in_shardings, out_shardings)`` ready for
+``jax.jit``. Sharding rules (models/sharding.Rules) are activated during
+tracing via the ``use_rules`` context inside the step functions, so the same
+model code runs un-annotated on a single CPU device in tests.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.config import ModelConfig, ShapeConfig, TrainConfig
+from repro.models import forward
+from repro.models.sharding import Rules, make_rules, named_sharding_tree, use_rules
+from repro.models.transformer import init_params
+from repro.launch import specs as SP
+from repro.train.losses import chunked_lm_loss
+from repro.train.optimizer import adamw_update, init_opt_state
+
+
+def serve_param_struct(cfg: ModelConfig):
+    """Serving checkpoints store weights in the inference dtype (bf16):
+    matrices take cfg.dtype, vectors stay f32."""
+    dt = jnp.dtype(cfg.dtype)
+
+    def build():
+        return init_params(cfg, jax.random.PRNGKey(0))
+
+    struct = jax.eval_shape(build)
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dt)
+        if (s.dtype == jnp.float32 and len(s.shape) >= 2)
+        else s,
+        struct,
+    )
+
+
+def abstract_state(cfg: ModelConfig, tc: TrainConfig):
+    """ShapeDtypeStruct tree of the train state (no allocation)."""
+
+    def build():
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        return {
+            "params": params,
+            "opt": init_opt_state(params),
+            "step": jnp.int32(0),
+        }
+
+    return jax.eval_shape(build)
+
+
+def state_shardings(cfg: ModelConfig, state_struct, mesh):
+    pspecs = named_sharding_tree(cfg, state_struct["params"], mesh)
+    return {
+        "params": pspecs,
+        "opt": {"m": pspecs, "v": pspecs},
+        "step": NamedSharding(mesh, P()),
+    }
+
+
+# ---------------------------------------------------------------------------
+
+
+def _cast_params_for_compute(cfg: ModelConfig, params, mesh,
+                             fsdp_params: bool = True):
+    """bf16 cast pinned to the master sharding so XLA casts *before* the
+    FSDP all-gather (halves gather wire bytes). Vectors (norm scales,
+    a_log, biases) stay f32 — model code handles their precision."""
+    specs = named_sharding_tree(cfg, params, mesh, fsdp_params=fsdp_params)
+    dt = jnp.dtype(cfg.dtype)
+
+    def one(p, s):
+        if p.ndim >= 2 and p.dtype == jnp.float32:
+            return jax.lax.with_sharding_constraint(p.astype(dt), s)
+        return p
+
+    return jax.tree_util.tree_map(one, params, specs)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    tc: TrainConfig,
+    mesh=None,
+    shape: Optional[ShapeConfig] = None,
+):
+    rules = None
+    if mesh is not None:
+        assert shape is not None
+        rules = make_rules(
+            cfg, mesh, kind="train", global_batch=shape.global_batch,
+            seq_len=shape.seq_len,
+        )
+    cast_early = mesh is not None and tc.param_gather_dtype == "bfloat16"
+
+    def loss_fn(params, batch):
+        if cast_early:
+            params = _cast_params_for_compute(cfg, params, mesh)
+        hidden, aux = forward(cfg, params, batch, mode="train")
+        loss, _ = chunked_lm_loss(
+            cfg, params["out_head"], hidden, batch["labels"], z_coef=tc.z_loss
+        )
+        total = loss + cfg.router_aux_coef * aux
+        return total, (loss, aux)
+
+    def compute_grads(params, batch):
+        if tc.microbatches > 1:
+            mb = tc.microbatches
+            B = batch[next(iter(batch))].shape[0]
+            assert B % mb == 0, (B, mb)
+            split = {
+                k: v.reshape(mb, B // mb, *v.shape[1:]) for k, v in batch.items()
+            }
+
+            def body(carry, xs):
+                gsum, lsum, asum = carry
+                (l, (ce, aux)), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, xs
+                )
+                gsum = jax.tree_util.tree_map(jnp.add, gsum, g)
+                return (gsum, lsum + ce, asum + aux), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (g, ce, aux), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0), jnp.float32(0)), split
+            )
+            g = jax.tree_util.tree_map(lambda x: x / mb, g)
+            return g, ce / mb, aux / mb
+        (l, (ce, aux)), g = jax.value_and_grad(loss_fn, has_aux=True)(params, batch)
+        return g, ce, aux
+
+    def train_step(state, batch):
+        with use_rules(rules):
+            grads, ce, aux = compute_grads(state["params"], batch)
+            params, opt, met = adamw_update(
+                tc, state["params"], grads, state["opt"], state["step"]
+            )
+        metrics = {"loss": ce, "aux": aux, **met}
+        return {"params": params, "opt": opt, "step": state["step"] + 1}, metrics
+
+    in_sh = out_sh = None
+    if mesh is not None:
+        st = abstract_state(cfg, tc)
+        ssh = state_shardings(cfg, st, mesh)
+        bsh = SP.batch_specs(cfg, rules, shape)
+        in_sh = (ssh, bsh)
+        out_sh = (ssh, None)
+    return train_step, in_sh, out_sh, rules
+
+
+def build_prefill_step(cfg: ModelConfig, mesh=None,
+                       shape: Optional[ShapeConfig] = None,
+                       fsdp_params: bool = False):
+    """Serving default: TP-only weight sharding (fsdp_params=False) — FSDP
+    weights would re-pay their all-gather every step (§Perf)."""
+    rules = None
+    if mesh is not None:
+        rules = make_rules(
+            cfg, mesh, kind="prefill", global_batch=shape.global_batch,
+            seq_len=shape.seq_len,
+        )
+
+    def prefill_step(params, batch):
+        with use_rules(rules):
+            if mesh is not None:
+                params = _cast_params_for_compute(cfg, params, mesh,
+                                                  fsdp_params=fsdp_params)
+            logits, caches = forward(cfg, params, batch, mode="prefill")
+        return logits, caches
+
+    in_sh = out_sh = None
+    if mesh is not None:
+        pstruct = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        psh = named_sharding_tree(cfg, pstruct, mesh, fsdp_params=fsdp_params)
+        bsh = SP.batch_specs(cfg, rules, shape)
+        in_sh = (psh, bsh)
+        b = rules.spec("batch")[0] if rules.table.get("batch") else None
+        logit_sh = NamedSharding(mesh, P(b, rules.spec("vocab")[0]))
+        cash = SP.cache_specs(cfg, rules, shape)
+        out_sh = (logit_sh, cash)
+    return prefill_step, in_sh, out_sh, rules
+
+
+def build_decode_step(cfg: ModelConfig, mesh=None,
+                      shape: Optional[ShapeConfig] = None,
+                      fsdp_params: bool = False):
+    rules = None
+    if mesh is not None:
+        rules = make_rules(
+            cfg, mesh, kind="decode", global_batch=shape.global_batch,
+            seq_len=shape.seq_len,
+        )
+
+    def decode_step(params, batch, caches):
+        with use_rules(rules):
+            if mesh is not None:
+                params = _cast_params_for_compute(cfg, params, mesh,
+                                                  fsdp_params=fsdp_params)
+            logits, caches = forward(cfg, params, batch, mode="decode",
+                                     caches=caches)
+        return logits, caches
+
+    in_sh = out_sh = None
+    if mesh is not None:
+        pstruct = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+        psh = named_sharding_tree(cfg, pstruct, mesh, fsdp_params=fsdp_params)
+        bsh = SP.batch_specs(cfg, rules, shape)
+        cash = SP.cache_specs(cfg, rules, shape)
+        in_sh = (psh, bsh, cash)
+        b = rules.spec("batch")[0] if rules.table.get("batch") else None
+        logit_sh = NamedSharding(mesh, P(b, rules.spec("vocab")[0]))
+        out_sh = (logit_sh, cash)
+    return decode_step, in_sh, out_sh, rules

@@ -1,0 +1,3 @@
+from repro.models.transformer import init_params, forward, init_caches
+
+__all__ = ["init_params", "forward", "init_caches"]

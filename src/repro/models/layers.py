@@ -1,0 +1,344 @@
+"""Core transformer building blocks (pure JAX, no flax).
+
+Conventions:
+  * params are nested dicts of f32 arrays; compute casts to ``cfg.dtype``.
+  * norms / softmax / running attention stats are f32.
+  * every activation annotates logical shardings via ``models.sharding.shard``
+    (identity in single-device tests).
+
+Attention supports three shapes of execution:
+  * full (train / prefill): flash-style two-level chunking (q chunks
+    vectorized, kv chunks scanned with running max/sum) — never materializes
+    the S×S score matrix;
+  * decode: one query token against a KV cache, scores (B, H, T);
+  * GQA throughout; q-heads shard over `model` when divisible, otherwise the
+    q-sequence does (see models/sharding.py).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.sharding import axis_size_of, shard
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, in_dim: int, out_dim: int, *, scale: Optional[float] = None):
+    if scale is None:
+        scale = 1.0 / math.sqrt(in_dim)
+    w = jax.random.normal(key, (in_dim, out_dim), dtype=jnp.float32) * scale
+    return {"w": w}
+
+
+def norm_init(cfg: ModelConfig, d: int):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if cfg.norm_type == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(cfg: ModelConfig, p, x):
+    xf = x.astype(jnp.float32)
+    if cfg.norm_type == "layernorm":
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(xf - mu), axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + 1e-5)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + 1e-6) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x):
+    """qk-norm: RMS over the head dim."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-6) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def linear(p, x, dtype):
+    return x.astype(dtype) @ p["w"].astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(cfg: ModelConfig, positions):
+    """positions: (...,) int32 -> (cos, sin) with shape (..., head_dim//2)."""
+    hd = cfg.head_dim
+    half = hd // 2
+    inv = 1.0 / (cfg.rope_theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (..., hd); cos/sin broadcastable (..., hd//2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos.astype(jnp.float32)
+    sin = sin.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    o1 = x1f * cos - x2f * sin
+    o2 = x2f * cos + x1f * sin
+    return jnp.concatenate([o1, o2], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ModelConfig, *, lora_rank: int = 0):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 8)
+    p = {
+        "wq": dense_init(ks[0], d, h * hd),
+        "wk": dense_init(ks[1], d, kv * hd),
+        "wv": dense_init(ks[2], d, kv * hd),
+        "wo": dense_init(ks[3], h * hd, d, scale=1.0 / math.sqrt(h * hd)),
+    }
+    if cfg.qk_norm:
+        p["qn"] = {"scale": jnp.ones((hd,), jnp.float32)}
+        p["kn"] = {"scale": jnp.ones((hd,), jnp.float32)}
+    return p
+
+
+def init_attention_lora(key, cfg: ModelConfig, rank: int):
+    """Per-invocation LoRA for the zamba2 shared attention block."""
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    k1, k2 = jax.random.split(key)
+    return {
+        "lora_a": dense_init(k1, d, rank),
+        "lora_b": {"w": jnp.zeros((rank, h * hd), jnp.float32)},
+    }
+
+
+def _flash_chunks(cfg, q, k, v, q_offset, causal):
+    """Flash-style attention: q (B,S,H,hd); k/v (B,T,KV,hd) full.
+
+    q is processed in parallel chunks; kv is scanned with running (m, l, acc).
+    GQA expansion (KV -> H) happens per kv-chunk inside the scan body so the
+    expanded buffer never exceeds one chunk, and the flattened H dim shards
+    over `model` whenever H divides (the grouped (KV, q_per_kv) layout cannot
+    shard for kv<16). Returns (B, S, H, hd).
+    """
+    B, S, H, hd = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    # the q-chunk count must be a multiple of the attn_seq shard count so the
+    # (B, nq, qc, H, hd) layout partitions exactly on nq
+    seq_shards = axis_size_of("attn_seq")
+    nq = seq_shards * max(1, -(-S // (cfg.attn_chunk * seq_shards)))
+    while S % nq != 0:
+        nq += seq_shards
+    qc = S // nq
+    kc = min(cfg.attn_chunk, T)
+    while T % kc:  # non-power-of-two prompt lengths (serving)
+        kc -= 1
+    nk = T // kc
+    assert S % qc == 0 and T % kc == 0, (S, qc, T, kc)
+
+    q5 = q.reshape(B, nq, qc, H, hd)
+    q5 = shard(q5, "batch", "attn_seq", None, "heads", None)
+    k4 = k.reshape(B, nk, kc, KV, hd)
+    v4 = v.reshape(B, nk, kc, KV, hd)
+
+    q_pos = q_offset + jnp.arange(S, dtype=jnp.int32).reshape(nq, qc)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kj, vj, j = inputs
+        k_pos = j * kc + jnp.arange(kc, dtype=jnp.int32)
+        # GQA expand for this chunk only: (B, kc, H, hd)
+        kx = jnp.repeat(kj, qpk, axis=2) if qpk > 1 else kj
+        vx = jnp.repeat(vj, qpk, axis=2) if qpk > 1 else vj
+        kx = shard(kx, "batch", None, "heads", None)
+        vx = shard(vx, "batch", None, "heads", None)
+        # scores: (B, nq, qc, H, kc), f32
+        s = jnp.einsum(
+            "bnqhd,bkhd->bnqhk", q5, kx, preferred_element_type=jnp.float32
+        )
+        s = s * scale
+        if causal:
+            mask = q_pos[None, :, :, None, None] >= k_pos[None, None, None, None, :]
+            s = jnp.where(mask, s, -1e30)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        pv = jnp.einsum(
+            "bnqhk,bkhd->bnqhd", p.astype(vx.dtype), vx,
+            preferred_element_type=jnp.float32,
+        )
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, nq, qc, H), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, nq, qc, H), jnp.float32)
+    a0 = jnp.zeros((B, nq, qc, H, hd), jnp.float32)
+    if nk == 1:
+        (m, l, acc), _ = body((m0, l0, a0), (k4[:, 0], v4[:, 0], jnp.int32(0)))
+    else:
+        ks = jnp.moveaxis(k4, 1, 0)  # (nk, B, kc, KV, hd)
+        vs = jnp.moveaxis(v4, 1, 0)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0), (ks, vs, jnp.arange(nk, dtype=jnp.int32))
+        )
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def _decode_attn(cfg, q, k_cache, v_cache, cache_len):
+    """q: (B, 1, H, hd); caches (B, T, KV, hd); attends to [0, cache_len]."""
+    B, _, H, hd = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    qpk = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q4 = q.reshape(B, KV, qpk, hd)
+    s = jnp.einsum(
+        "bgph,btgh->bgpt", q4, k_cache, preferred_element_type=jnp.float32
+    ) * scale
+    t_pos = jnp.arange(T, dtype=jnp.int32)
+    mask = t_pos[None, None, None, :] <= cache_len  # current token included
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum(
+        "bgpt,btgh->bgph", p.astype(v_cache.dtype), v_cache,
+        preferred_element_type=jnp.float32,
+    )
+    return out.reshape(B, 1, H, hd).astype(q.dtype)
+
+
+def attention(
+    cfg: ModelConfig,
+    p,
+    x,
+    *,
+    pos_offset,
+    cache: Optional[dict] = None,
+    mode: str = "train",
+    lora: Optional[dict] = None,
+) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """Returns (y, new_cache). Modes: train (no cache), prefill (build cache),
+    decode (read+append cache)."""
+    B, S, d = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    dt = x.dtype
+
+    q = linear(p["wq"], x, dt)
+    if lora is not None:  # zamba2 per-invocation LoRA on the q projection
+        q = q + linear(lora["lora_b"], linear(lora["lora_a"], x, dt), dt)
+    k = linear(p["wk"], x, dt)
+    v = linear(p["wv"], x, dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+
+    if cfg.qk_norm:
+        q = rms_head_norm(p["qn"]["scale"], q)
+        k = rms_head_norm(p["kn"]["scale"], k)
+
+    if cfg.rope_theta > 0:
+        pos = pos_offset + jnp.arange(S, dtype=jnp.int32)
+        cos, sin = rope_freqs(cfg, pos)  # (S, hd/2)
+        q = apply_rope(q, cos[None, :, None, :], sin[None, :, None, :])
+        k = apply_rope(k, cos[None, :, None, :], sin[None, :, None, :])
+
+    q = shard(q, "batch", "attn_seq", "heads", None)
+    k = shard(k, "batch", None, "kv_heads", None)
+    v = shard(v, "batch", None, "kv_heads", None)
+
+    new_cache = None
+    if mode == "decode":
+        assert cache is not None and S == 1
+        T = cache["k"].shape[1]
+        pos_idx = cache["len"]  # scalar int32: number of valid tokens
+        z = jnp.zeros((), pos_idx.dtype)
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (z, pos_idx, z, z)
+        )
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (z, pos_idx, z, z)
+        )
+        # time dim takes `model` (kv_seq); heads stay unsharded here — a spec
+        # may not use a mesh axis twice.
+        k_cache = shard(k_cache, "batch", "kv_seq", None, None)
+        v_cache = shard(v_cache, "batch", "kv_seq", None, None)
+        out = _decode_attn(cfg, q, k_cache, v_cache, pos_idx)
+        new_cache = {"k": k_cache, "v": v_cache, "len": pos_idx + 1}
+    else:
+        out = _flash_chunks(cfg, q, k, v, pos_offset, cfg.causal)
+        if mode == "prefill":
+            kc = shard(k.astype(dt), "batch", "kv_seq", None, None)
+            vc = shard(v.astype(dt), "batch", "kv_seq", None, None)
+            new_cache = {"k": kc, "v": vc, "len": jnp.int32(S)}
+
+    out = shard(out, "batch", "attn_seq", "heads", None)
+    y = out.reshape(B, S, H * hd) @ p["wo"]["w"].astype(dt)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+
+def _act(cfg, x):
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x)
+    return jax.nn.silu(x)
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: Optional[int] = None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w1": dense_init(ks[0], d, f),
+        "w2": dense_init(ks[1], f, d),
+    }
+    if cfg.gated_mlp:
+        p["w3"] = dense_init(ks[2], d, f)
+    return p
+
+
+def mlp(cfg: ModelConfig, p, x):
+    dt = x.dtype
+    h = _act(cfg, linear(p["w1"], x, dt))
+    if cfg.gated_mlp:
+        h = h * linear(p["w3"], x, dt)
+    h = shard(h, "batch", None, "d_ff")
+    return linear(p["w2"], h, dt)
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def embed(p, tokens, dtype):
+    return jnp.take(p["table"].astype(dtype), tokens, axis=0)
+
+
+def unembed(p, x, dtype=jnp.float32):
+    """logits = x @ table^T, in f32 for loss stability."""
+    return jnp.einsum(
+        "bsd,vd->bsv", x, p["table"].astype(x.dtype), preferred_element_type=dtype
+    )

@@ -1,0 +1,295 @@
+"""Logical-axis sharding rules with divisibility fallbacks.
+
+The production mesh is fixed — ``(data=16, model=16)`` per pod, optionally a
+leading ``pod`` axis — but head counts across the 10 assigned architectures
+are not uniformly divisible by 16 (llama4: 40H, smollm: 15H, musicgen: 24H).
+Model code therefore annotates *logical* names and this module resolves them
+to mesh axes per (config, shape, mesh), falling back when a dim does not
+divide:
+
+  * q-heads not divisible by |model|  ->  attention shards the q-sequence
+    ("attn_seq" -> model) instead of heads;
+  * kv-heads not divisible            ->  decode caches shard the kv-sequence
+    ("kv_seq" -> model) — always divisible for our shapes (32768, 524288);
+  * batch=1 (long_500k)               ->  sequence takes the data axes.
+
+Rules live in a module-global context set by the step builders
+(``repro.launch.steps``); in unit tests no rules are active and ``shard`` is
+the identity, so model code runs unmodified on one CPU device.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.config import MeshConfig, ModelConfig
+
+Axes = Optional[Tuple[str, ...]]  # mesh axes for one logical name
+
+
+@dataclass
+class Rules:
+    """Resolved logical-name -> mesh-axes mapping for one (cfg, shape, mesh)."""
+
+    mesh: object  # jax.sharding.Mesh
+    table: Dict[str, Axes]
+    # resolved booleans model code may branch on (static at trace time)
+    shard_heads: bool = False
+    shard_kv_heads: bool = False
+    seq_shard_attn: bool = False
+
+    def spec(self, *names: Optional[str]) -> P:
+        parts = []
+        for n in names:
+            if n is None:
+                parts.append(None)
+            else:
+                ax = self.table.get(n)
+                if ax is None:
+                    parts.append(None)
+                elif len(ax) == 1:
+                    parts.append(ax[0])
+                else:
+                    parts.append(ax)
+        return P(*parts)
+
+
+_ACTIVE: Optional[Rules] = None
+
+
+def active_rules() -> Optional[Rules]:
+    return _ACTIVE
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[Rules]):
+    global _ACTIVE
+    prev = _ACTIVE
+    _ACTIVE = rules
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+
+
+def axis_size_of(name: str) -> int:
+    """Product of mesh-axis sizes a logical name maps to (1 if inactive)."""
+    r = _ACTIVE
+    if r is None:
+        return 1
+    ax = r.table.get(name)
+    if not ax:
+        return 1
+    sizes = dict(zip(r.mesh.axis_names, r.mesh.devices.shape))
+    n = 1
+    for a in ax:
+        n *= sizes[a]
+    return n
+
+
+def shard(x, *names: Optional[str]):
+    """Annotate ``x`` with the sharding for logical dim ``names``.
+
+    Identity when no rules are active (single-device tests) — model code is
+    unconditional.
+    """
+    r = _ACTIVE
+    if r is None:
+        return x
+    assert x.ndim == len(names), f"{x.shape} vs {names}"
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(r.mesh, r.spec(*names))
+    )
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def make_rules(
+    cfg: ModelConfig,
+    mesh,
+    *,
+    kind: str,  # train | prefill | decode
+    global_batch: int,
+    seq_len: int,
+) -> Rules:
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_sz = axis_sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    dp_sz = 1
+    for a in dp_axes:
+        dp_sz *= axis_sizes[a]
+
+    shard_heads = _divides(cfg.num_heads, model_sz)
+    shard_kv_heads = _divides(cfg.num_kv_heads, model_sz)
+    seq_shard_attn = not shard_heads and _divides(seq_len, model_sz) and seq_len > 1
+
+    # batch: prefer full DP; long_500k (batch=1) gives the data axes to seq.
+    if _divides(global_batch, dp_sz):
+        batch_ax: Axes = dp_axes
+        long_mode = False
+    else:
+        batch_ax = None
+        long_mode = True
+
+    table: Dict[str, Axes] = {}
+    table["batch"] = batch_ax
+    table["vocab"] = ("model",)
+    table["d_ff"] = ("model",)
+    table["expert"] = ("model",)
+    table["heads"] = ("model",) if shard_heads else None
+    table["kv_heads"] = ("model",) if shard_kv_heads else None
+    table["attn_seq"] = ("model",) if seq_shard_attn else None
+    # SSM head count differs from attention head count (mamba2: d_in/64)
+    if cfg.family == "hybrid":
+        ssm_h = (cfg.ssm_expand * cfg.d_model) // 64
+    elif cfg.family == "ssm":
+        ssm_h = cfg.num_heads
+    else:
+        ssm_h = 0
+    table["ssm_heads"] = ("model",) if _divides(ssm_h, model_sz) else None
+    # inter-block activation stash: sequence-parallel over `model` for
+    # attention families, embed-parallel for recurrent families (their scan
+    # runs over sequence chunks and must see the full sequence locally).
+    recurrent = cfg.family in ("ssm", "hybrid")
+    if kind in ("train", "prefill") and seq_len > 1:
+        if not recurrent and _divides(seq_len, model_sz):
+            table["act_seq"] = ("model",)
+            table["act_embed"] = None
+        elif recurrent and _divides(cfg.d_model, model_sz):
+            table["act_seq"] = None
+            table["act_embed"] = ("model",)
+        else:
+            table["act_seq"] = None
+            table["act_embed"] = None
+    else:
+        table["act_seq"] = None
+        table["act_embed"] = None
+
+    # decode KV cache: shard the time dim over `model` (always divisible for
+    # 32k / 500k); in long mode (batch=1) give it the data axes as well.
+    kv_axes = []
+    if long_mode:
+        kv_axes.extend(dp_axes)
+    kv_axes.append("model")
+    total = 1
+    for a in kv_axes:
+        total *= axis_sizes[a]
+    table["kv_seq"] = tuple(kv_axes) if _divides(seq_len, total) else None
+
+    # embedding-dim of weights for FSDP: shard over data axes — training
+    # only (serving re-pays the gather every step; weights are TP-sharded
+    # and data-replicated there, see §Perf deepseek/llama4 decode)
+    table["fsdp"] = dp_axes if (dp_axes and kind == "train") else None
+    table["seq_dp"] = dp_axes if long_mode and _divides(seq_len, dp_sz) else None
+
+    return Rules(
+        mesh=mesh,
+        table=table,
+        shard_heads=shard_heads,
+        shard_kv_heads=shard_kv_heads,
+        seq_shard_attn=seq_shard_attn,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameter shardings (FSDP over data axes + TP over model)
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig, params, mesh, *, fsdp_params: bool = True
+                ) -> Dict:
+    """PartitionSpec pytree matching ``params``.
+
+    Convention by path name (see models/*.py param layouts):
+      * ...embedding "table" (V, d)            -> (model, fsdp)
+      * attention wq/wo etc. (d, n)            -> (fsdp, model)
+      * moe experts w* (E, d, f)               -> (model, fsdp, None)
+      * norm scales / biases / small vectors   -> replicated
+    Stacked-layer params have a leading L dim (replicated).
+
+    ``fsdp_params=False`` drops the data-axis shard (TP-only): the serving
+    layout — decode would otherwise re-pay the full FSDP all-gather on
+    every token step (see EXPERIMENTS.md §Perf, deepseek decode).
+    """
+    axis_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    model_sz = axis_sizes.get("model", 1)
+    dp_axes = tuple(a for a in ("pod", "data") if a in axis_sizes)
+    dp_sz = 1
+    for a in dp_axes:
+        dp_sz *= axis_sizes[a]
+    if not fsdp_params:
+        dp_axes = ()
+        dp_sz = 1
+    fsdp = dp_axes if dp_axes else None
+
+    def spec_for(path: str, x) -> P:
+        shape = x.shape
+        name = path.split("/")[-1]
+        nstack = 1 if "stacked" in path else 0  # leading layer dim(s)
+        # normalize: dims after the stack prefix
+        dims = shape[nstack:] if nstack else shape
+        pad = (None,) * nstack
+
+        def ok(dim_idx, sz):
+            return dims[dim_idx] % sz == 0
+
+        if name in ("scale", "bias", "a_log", "dt_bias", "d_skip") or len(dims) <= 1:
+            return P(*pad, *([None] * len(dims)))
+        if name == "table":  # (V, d) embedding / unembedding
+            v_ok = ok(0, model_sz)
+            d_ok = ok(1, dp_sz) if fsdp else False
+            return P(*pad, "model" if v_ok else None, fsdp if d_ok else None)
+        if name == "expert_w2":  # (E, f, d): FSDP on the *output* dim
+            e_ok = ok(0, model_sz)
+            d_ok = ok(2, dp_sz) if fsdp else False
+            return P(*pad, "model" if e_ok else None, None, fsdp if d_ok else None)
+        if name.startswith("expert"):  # (E, d, f)
+            e_ok = ok(0, model_sz)
+            d_ok = ok(1, dp_sz) if fsdp else False
+            return P(
+                *pad,
+                "model" if e_ok else None,
+                fsdp if d_ok else None,
+                *([None] * (len(dims) - 2)),
+            )
+        if len(dims) == 2:  # (in, out) dense kernels
+            in_ok = ok(0, dp_sz) if fsdp else False
+            out_ok = ok(1, model_sz)
+            # FSDP on the input dim, TP on the output dim when divisible;
+            # fall back to sharding whichever side divides.
+            if out_ok:
+                return P(*pad, fsdp if in_ok else None, "model")
+            if in_ok:
+                return P(*pad, fsdp, None)
+            return P(*pad, None, None)
+        if len(dims) == 3:  # e.g. conv kernels (w, d, 1) or (H, ...) blocks
+            return P(*pad, *([None] * len(dims)))
+        return P(*pad, *([None] * len(dims)))
+
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    specs = {}
+
+    def build(tree, prefix=""):
+        if isinstance(tree, dict):
+            return {k: build(v, prefix + "/" + str(k)) for k, v in tree.items()}
+        return spec_for(prefix, tree)
+
+    del flat, specs
+    return build(params)
+
+
+def named_sharding_tree(cfg: ModelConfig, params, mesh, *,
+                        fsdp_params: bool = True):
+    specs = param_specs(cfg, params, mesh, fsdp_params=fsdp_params)
+    return jax.tree_util.tree_map(
+        lambda s: jax.sharding.NamedSharding(mesh, s),
+        specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )

@@ -1,0 +1,406 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Both Mamba2 and mLSTM are instances of one primitive — a gated linear RNN
+
+    S_t = exp(logdecay_t) * S_{t-1} + B_t ⊗ X_t          S: (H, N, P)
+    Y_t = C_t · S_t                                       Y: (H, P)
+
+so we implement a single *chunkwise-parallel* kernel (`chunked_linear_rnn`):
+intra-chunk contributions are computed with quadratic-in-chunk einsums
+(MXU-friendly) and inter-chunk state is carried by a `lax.scan` — the
+standard SSD decomposition [arXiv:2405.21060].
+
+sLSTM has a true nonlinear recurrence (hidden state feeds the gates), so it
+runs as a `lax.scan` over time with block-diagonal recurrent weights and
+exponential-gating stabilizer state, faithful to [arXiv:2405.04517].
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.layers import dense_init, linear, norm_init, apply_norm
+from repro.models.sharding import shard
+
+# ---------------------------------------------------------------------------
+# shared chunked linear RNN (SSD form)
+# ---------------------------------------------------------------------------
+
+
+def _segsum(x):
+    """log-space segment sums: x (..., L) -> (..., L, L) lower-triangular
+    cumulative sums  out[..., i, j] = sum_{k=j+1..i} x[..., k]  (i >= j)."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    i = jnp.arange(L, dtype=jnp.int32)
+    mask = i[:, None] >= i[None, :]
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def chunked_linear_rnn(
+    C: jnp.ndarray,  # (B, L, H, N)   "query"/output mixer
+    Bm: jnp.ndarray,  # (B, L, H, N)  "key"/input mixer
+    X: jnp.ndarray,  # (B, L, H, P)   values
+    logdecay: jnp.ndarray,  # (B, L, H) per-step log decay (<= 0)
+    chunk: int,
+    initial_state: Optional[jnp.ndarray] = None,  # (B, H, N, P)
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (Y (B,L,H,P), final_state (B,H,N,P))."""
+    B, L, H, N = C.shape
+    P = X.shape[-1]
+    cl = min(chunk, L)
+    nc = L // cl
+    assert L % cl == 0, (L, cl)
+
+    f32 = jnp.float32
+    Cc = shard(C.reshape(B, nc, cl, H, N), "batch", None, None, "ssm_heads", None)
+    Bc = shard(Bm.reshape(B, nc, cl, H, N), "batch", None, None, "ssm_heads", None)
+    Xc = shard(X.reshape(B, nc, cl, H, P), "batch", None, None, "ssm_heads", None)
+    ld = logdecay.reshape(B, nc, cl, H).astype(f32)
+
+    # intra-chunk: scores[b,c,i,j,h] = C_i · B_j * exp(sum_{j<k<=i} ld_k)
+    ldt = jnp.moveaxis(ld, -1, -2)  # (B, nc, H, cl)
+    seg = _segsum(ldt)  # (B, nc, H, cl, cl)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", Cc, Bc, preferred_element_type=f32)
+    scores = shard(scores, "batch", None, "ssm_heads", None, None)
+    scores = scores * jnp.exp(seg)
+    y_intra = jnp.einsum(
+        "bchij,bcjhp->bcihp", scores.astype(X.dtype), Xc, preferred_element_type=f32
+    )
+
+    # per-chunk end states: state_c = sum_j exp(sum_{k>j} ld) B_j X_j
+    total = jnp.sum(ld, axis=2)  # (B, nc, H)
+    decay_tail = jnp.exp(total[:, :, None, :] - jnp.cumsum(ld, axis=2))  # (B,nc,cl,H)
+    chunk_states = jnp.einsum(
+        "bcjhn,bcjh,bcjhp->bchnp",
+        Bc.astype(f32),
+        decay_tail,
+        Xc.astype(f32),
+        preferred_element_type=f32,
+    )  # (B, nc, H, N, P)
+
+    # inter-chunk scan over chunk states
+    s0 = (
+        initial_state.astype(f32)
+        if initial_state is not None
+        else jnp.zeros((B, H, N, P), f32)
+    )
+
+    def body(s, inp):
+        st_c, tot_c = inp  # (B,H,N,P), (B,H)
+        s_out = s  # state entering this chunk
+        s_next = s * jnp.exp(tot_c)[:, :, None, None] + st_c
+        return s_next, s_out
+
+    sts = jnp.moveaxis(chunk_states, 1, 0)  # (nc, B, H, N, P)
+    tots = jnp.moveaxis(total, 1, 0)  # (nc, B, H)
+    final, entering = jax.lax.scan(body, s0, (sts, tots))
+    entering = jnp.moveaxis(entering, 0, 1)  # (B, nc, H, N, P)
+
+    # contribution of the entering state within each chunk
+    decay_in = jnp.exp(jnp.cumsum(ld, axis=2))  # (B, nc, cl, H)
+    y_inter = jnp.einsum(
+        "bcihn,bcih,bchnp->bcihp",
+        Cc.astype(f32),
+        decay_in,
+        entering,
+        preferred_element_type=f32,
+    )
+    y = (y_intra + y_inter).reshape(B, L, H, P)
+    return y.astype(X.dtype), final
+
+
+def linear_rnn_step(
+    C, Bm, X, logdecay, state
+):  # shapes: (B,H,N), (B,H,N), (B,H,P), (B,H), (B,H,N,P)
+    """Single decode step of the same recurrence."""
+    f32 = jnp.float32
+    s = state.astype(f32) * jnp.exp(logdecay.astype(f32))[..., None, None]
+    s = s + Bm.astype(f32)[..., None] * X.astype(f32)[..., None, :]
+    y = jnp.einsum("bhn,bhnp->bhp", C.astype(f32), s, preferred_element_type=f32)
+    return y.astype(X.dtype), s
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block  [arXiv:2405.21060]
+# ---------------------------------------------------------------------------
+
+
+def mamba2_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    head_p = 64
+    H = d_in // head_p
+    return d_in, H, head_p, cfg.ssm_state
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, H, P, N = mamba2_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "wx": dense_init(ks[0], d, d_in),
+        "wz": dense_init(ks[1], d, d_in),
+        "wB": dense_init(ks[2], d, N),
+        "wC": dense_init(ks[3], d, N),
+        "wdt": dense_init(ks[4], d, H),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, H, dtype=jnp.float32)
+        ),  # A = -exp(a_log)
+        "d_skip": jnp.ones((H,), jnp.float32),
+        "conv": {
+            "w": jax.random.normal(ks[5], (cfg.ssm_conv, d_in + 2 * N), jnp.float32)
+            * (1.0 / math.sqrt(cfg.ssm_conv))
+        },
+        "wo": dense_init(ks[6], d_in, d),
+        "gn": {"scale": jnp.ones((d_in,), jnp.float32)},
+    }
+
+
+def _causal_conv(xbc, w, state=None):
+    """xbc: (B, L, Cch); w: (W, Cch) depthwise causal conv.
+
+    Returns (y, new_state) where state is the trailing (W-1) inputs.
+    """
+    B, L, Cch = xbc.shape
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((B, W - 1, Cch), xbc.dtype)
+    xp = jnp.concatenate([state.astype(xbc.dtype), xbc], axis=1)  # (B, L+W-1, C)
+    out = jnp.zeros((B, L, Cch), jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + L, :].astype(jnp.float32) * w[i].astype(jnp.float32)
+    new_state = xp[:, L:, :] if W > 1 else state
+    return out.astype(xbc.dtype), new_state
+
+
+def mamba2(cfg: ModelConfig, p, x, *, cache=None, mode="train"):
+    """x: (B, L, d). cache: {"ssm": (B,H,N,P), "conv": (B,W-1,C)}."""
+    B, L, d = x.shape
+    d_in, H, P, N = mamba2_dims(cfg)
+    dt_ = x.dtype
+
+    xin = linear(p["wx"], x, dt_)  # (B,L,d_in)
+    z = linear(p["wz"], x, dt_)
+    Bv = linear(p["wB"], x, dt_)  # (B,L,N)
+    Cv = linear(p["wC"], x, dt_)
+    dt_pre = linear(p["wdt"], x, jnp.float32) + p["dt_bias"]  # (B,L,H)
+
+    xbc = jnp.concatenate([xin, Bv, Cv], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, p["conv"]["w"], conv_state)
+    xbc = jax.nn.silu(xbc)
+    xin, Bv, Cv = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt_pre)  # (B,L,H)
+    A = -jnp.exp(p["a_log"])  # (H,)
+    logdecay = dt * A[None, None, :]  # (B,L,H)
+
+    xh = xin.reshape(B, L, H, P)
+    xh = shard(xh, "batch", None, "ssm_heads", None)
+    Bh = jnp.broadcast_to(Bv[:, :, None, :], (B, L, H, N))
+    Ch = jnp.broadcast_to(Cv[:, :, None, :], (B, L, H, N))
+    xs = xh * dt[..., None].astype(dt_)
+
+    ssm_state = cache["ssm"] if cache is not None else None
+    if mode == "decode":
+        assert L == 1
+        y, new_state = linear_rnn_step(
+            Ch[:, 0], Bh[:, 0], xs[:, 0], logdecay[:, 0], ssm_state
+        )
+        y = y[:, None]
+    else:
+        y, new_state = chunked_linear_rnn(
+            Ch, Bh, xs, logdecay, cfg.ssm_chunk, initial_state=ssm_state
+        )
+
+    y = y + xh.astype(jnp.float32) * p["d_skip"][None, None, :, None]
+    y = y.reshape(B, L, d_in).astype(dt_)
+    # gated RMSNorm (Mamba2 uses RMSNorm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    yf = y.astype(jnp.float32)
+    y = yf * jax.lax.rsqrt(jnp.mean(jnp.square(yf), -1, keepdims=True) + 1e-6)
+    y = (y * p["gn"]["scale"]).astype(dt_)
+    out = linear(p["wo"], y, dt_)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"ssm": new_state, "conv": new_conv}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: mLSTM block  [arXiv:2405.04517]
+# ---------------------------------------------------------------------------
+
+
+def mlstm_dims(cfg: ModelConfig):
+    d_in = 2 * cfg.d_model  # proj factor 2
+    H = cfg.num_heads
+    P = d_in // H
+    return d_in, H, P
+
+
+def init_mlstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    d_in, H, P = mlstm_dims(cfg)
+    ks = jax.random.split(key, 9)
+    return {
+        "wup": dense_init(ks[0], d, d_in),
+        "wz": dense_init(ks[1], d, d_in),
+        "wq": dense_init(ks[2], d_in, d_in),
+        "wk": dense_init(ks[3], d_in, d_in),
+        "wv": dense_init(ks[4], d_in, d_in),
+        "wi": dense_init(ks[5], d_in, H),
+        "wf": dense_init(ks[6], d_in, H),
+        "conv": {
+            "w": jax.random.normal(ks[7], (4, d_in), jnp.float32) * 0.5
+        },
+        "wo": dense_init(ks[8], d_in, d),
+        "gn": {"scale": jnp.ones((d_in,), jnp.float32)},
+    }
+
+
+def mlstm(cfg: ModelConfig, p, x, *, cache=None, mode="train"):
+    """mLSTM with matrix memory, run through the shared chunked linear RNN.
+
+    Stabilization: sigmoid forget gate (log-space decay), exp input gate
+    clamped at 0 — the recurrent CPU decode path matches this parallel form
+    exactly (see tests/test_models_parity.py).
+    """
+    B, L, d = x.shape
+    d_in, H, P = mlstm_dims(cfg)
+    dt_ = x.dtype
+
+    up = linear(p["wup"], x, dt_)
+    z = linear(p["wz"], x, dt_)
+    conv_state = cache["conv"] if cache is not None else None
+    c, new_conv = _causal_conv(up, p["conv"]["w"], conv_state)
+    c = jax.nn.silu(c)
+
+    q = linear(p["wq"], c, dt_).reshape(B, L, H, P) / math.sqrt(P)
+    k = linear(p["wk"], c, dt_).reshape(B, L, H, P) / math.sqrt(P)
+    v = linear(p["wv"], up, dt_).reshape(B, L, H, P)
+
+    logf = jax.nn.log_sigmoid(linear(p["wf"], c, jnp.float32))  # (B,L,H)
+    logi = jnp.minimum(linear(p["wi"], c, jnp.float32), 0.0)
+    i_gate = jnp.exp(logi)
+
+    kx = k * i_gate[..., None].astype(dt_)
+    ssm_state = cache["ssm"] if cache is not None else None
+    norm_state = cache["norm"] if cache is not None else None
+    if mode == "decode":
+        assert L == 1
+        h, new_state = linear_rnn_step(q[:, 0], kx[:, 0], v[:, 0], logf[:, 0], ssm_state)
+        ones = jnp.ones((B, H, 1), dt_)
+        nrm, new_norm = linear_rnn_step(
+            q[:, 0], kx[:, 0], ones, logf[:, 0], norm_state
+        )
+        h, nrm = h[:, None], nrm[:, None]
+    else:
+        h, new_state = chunked_linear_rnn(
+            q, kx, v, logf, cfg.ssm_chunk, initial_state=ssm_state
+        )
+        ones = jnp.ones((B, L, H, 1), dt_)
+        nrm, new_norm = chunked_linear_rnn(
+            q, kx, ones, logf, cfg.ssm_chunk, initial_state=norm_state
+        )
+    h = h / jnp.maximum(jnp.abs(nrm), 1.0).astype(h.dtype)
+
+    h = h.reshape(B, L, d_in)
+    hf = h.astype(jnp.float32)
+    h = hf * jax.lax.rsqrt(jnp.mean(jnp.square(hf), -1, keepdims=True) + 1e-6)
+    h = (h * p["gn"]["scale"]).astype(dt_)
+    out = linear(p["wo"], h * jax.nn.silu(z), dt_)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"ssm": new_state, "norm": new_norm, "conv": new_conv}
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# xLSTM: sLSTM block (true nonlinear recurrence -> lax.scan over time)
+# ---------------------------------------------------------------------------
+
+
+def slstm_dims(cfg: ModelConfig):
+    H = cfg.num_heads
+    P = cfg.d_model // H
+    return H, P
+
+
+def init_slstm(key, cfg: ModelConfig):
+    d = cfg.d_model
+    H, P = slstm_dims(cfg)
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(P)
+    # input projections for the 4 gates + block-diag recurrent weights
+    return {
+        "wgates": dense_init(ks[0], d, 4 * d),
+        "r": jax.random.normal(ks[1], (4, H, P, P), jnp.float32) * s,
+        "bias": jnp.zeros((4, d), jnp.float32),
+        "ln": norm_init(cfg, d),
+        "wup": dense_init(ks[2], d, 2 * (4 * d // 3)),
+        "wdown": dense_init(ks[3], 4 * d // 3, d),
+    }
+
+
+def slstm(cfg: ModelConfig, p, x, *, cache=None, mode="train"):
+    """x: (B, L, d). Exponential gating with stabilizer state m (faithful).
+
+    cache: {"c","n","h": (B,d), "m": (B,H)}
+    """
+    B, L, d = x.shape
+    H, P = slstm_dims(cfg)
+    f32 = jnp.float32
+
+    gates_in = (linear(p["wgates"], x, f32)).reshape(B, L, 4, d) + p["bias"]
+
+    if cache is not None:
+        c0, n0, h0, m0 = cache["c"], cache["n"], cache["h"], cache["m"]
+    else:
+        c0 = jnp.zeros((B, d), f32)
+        n0 = jnp.full((B, d), 1e-6, f32)
+        h0 = jnp.zeros((B, d), f32)
+        m0 = jnp.zeros((B, d), f32)
+
+    r = p["r"].astype(f32)
+
+    def step(carry, g_t):
+        c, n, h, m = carry
+        hh = h.reshape(B, H, P)
+        rec = jnp.einsum("ghpq,bhq->bghp", r, hh).reshape(B, 4, d)
+        pre = g_t + rec
+        zi = jnp.tanh(pre[:, 0])
+        i_pre = pre[:, 1]  # per-cell exponential gates (B, d)
+        logf = jax.nn.log_sigmoid(pre[:, 2])
+        o = jax.nn.sigmoid(pre[:, 3])
+        m_new = jnp.maximum(logf + m, i_pre)  # stabilizer state
+        i_g = jnp.exp(i_pre - m_new)
+        f_g = jnp.exp(logf + m - m_new)
+        c_new = f_g * c + i_g * zi
+        n_new = f_g * n + i_g
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, h_new, m_new), h_new
+
+    gs = jnp.moveaxis(gates_in, 1, 0)  # (L, B, 4, d)
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), gs)
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B, L, d)
+
+    # post-up/down projection (GLU, proj factor 4/3)
+    y = apply_norm(cfg, p["ln"], y)
+    u = linear(p["wup"], y, x.dtype)
+    u1, u2 = jnp.split(u, 2, axis=-1)
+    out = linear(p["wdown"], jax.nn.gelu(u1) * u2, x.dtype)
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = {"c": c, "n": n, "h": h, "m": m}
+    return out, new_cache

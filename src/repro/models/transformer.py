@@ -1,0 +1,415 @@
+"""Model assembly: init / forward / caches for all 10 assigned families.
+
+Layer stacking uses ``lax.scan`` over *super-blocks* with stacked parameters
+(compile time and HLO size O(1) in depth):
+
+  * dense/moe/audio/vlm : super-block = [attn + (mlp|moe)]         × L
+  * ssm (xlstm)         : super-block = [(per-1) × mLSTM + sLSTM]  × L/per
+  * hybrid (zamba2)     : super-block = [6 × mamba2 + shared-attn] × L/6
+                          (shared attention weights are *not* stacked; each
+                          invocation gets its own LoRA adapter, Zamba2-style)
+
+Parameter tree convention (relied on by models/sharding.param_specs):
+  {"embed": ..., "out_head": ..., "final_norm": ...,
+   "stacked": <one leading stack dim on every leaf>, "shared": <unstacked>}
+
+``forward`` returns:
+  * mode="train":   (hidden (B,S,d), aux_loss)        — loss/unembed chunked in steps
+  * mode="prefill": (last_logits (B,V), caches)
+  * mode="decode":  (logits (B,V), caches)
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+from repro.models.sharding import shard
+
+# ---------------------------------------------------------------------------
+# block init/apply per family
+# ---------------------------------------------------------------------------
+
+
+def _init_attn_mlp_block(key, cfg: ModelConfig):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {
+        "ln1": L.norm_init(cfg, cfg.d_model),
+        "attn": L.init_attention(k1, cfg),
+        "ln2": L.norm_init(cfg, cfg.d_model),
+    }
+    if cfg.family == "moe":
+        p["moe"] = M.init_moe(k2, cfg)
+    else:
+        p["mlp"] = L.init_mlp(k2, cfg)
+    return p
+
+
+def _apply_attn_mlp_block(cfg, p, x, *, pos_offset, cache, mode, lora=None):
+    h, new_cache = L.attention(
+        cfg, p["attn"], L.apply_norm(cfg, p["ln1"], x),
+        pos_offset=pos_offset, cache=cache, mode=mode, lora=lora,
+    )
+    x = x + h
+    x = shard(x, "batch", "act_seq", "act_embed")
+    aux = jnp.float32(0.0)
+    if "moe" in p:
+        h, aux = M.moe_ffn(cfg, p["moe"], L.apply_norm(cfg, p["ln2"], x))
+    else:
+        h = L.mlp(cfg, p["mlp"], L.apply_norm(cfg, p["ln2"], x))
+    x = x + h
+    x = shard(x, "batch", "act_seq", "act_embed")
+    return x, new_cache, aux
+
+
+def _init_mamba_block(key, cfg):
+    return {"ln": L.norm_init(cfg, cfg.d_model), "mamba": S.init_mamba2(key, cfg)}
+
+
+def _apply_mamba_block(cfg, p, x, *, cache, mode):
+    h, new_cache = S.mamba2(cfg, p["mamba"], L.apply_norm(cfg, p["ln"], x),
+                            cache=cache, mode=mode)
+    x = x + h
+    x = shard(x, "batch", "act_seq", "act_embed")
+    return x, new_cache
+
+
+def _init_mlstm_block(key, cfg):
+    return {"ln": L.norm_init(cfg, cfg.d_model), "mlstm": S.init_mlstm(key, cfg)}
+
+
+def _apply_mlstm_block(cfg, p, x, *, cache, mode):
+    h, new_cache = S.mlstm(cfg, p["mlstm"], L.apply_norm(cfg, p["ln"], x),
+                           cache=cache, mode=mode)
+    x = x + h
+    x = shard(x, "batch", "act_seq", "act_embed")
+    return x, new_cache
+
+
+def _init_slstm_block(key, cfg):
+    return {"ln_pre": L.norm_init(cfg, cfg.d_model), "slstm": S.init_slstm(key, cfg)}
+
+
+def _apply_slstm_block(cfg, p, x, *, cache, mode):
+    h, new_cache = S.slstm(cfg, p["slstm"], L.apply_norm(cfg, p["ln_pre"], x),
+                           cache=cache, mode=mode)
+    x = x + h
+    x = shard(x, "batch", "act_seq", "act_embed")
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# stack layout
+# ---------------------------------------------------------------------------
+
+
+def _stack_info(cfg: ModelConfig):
+    """(num_super, inner_counts) per family."""
+    if cfg.family == "hybrid":
+        per = cfg.attn_every
+        assert cfg.num_layers % per == 0
+        return cfg.num_layers // per, per
+    if cfg.family == "ssm":
+        per = cfg.slstm_every
+        assert cfg.num_layers % per == 0
+        return cfg.num_layers // per, per - 1  # inner mLSTM count
+    return cfg.num_layers, 1
+
+
+def _vmap_init(fn, keys):
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    V = cfg.padded_vocab
+    params: dict = {
+        "final_norm": L.norm_init(cfg, d),
+        "out_head": L.init_embedding(ks[0], V, d),
+    }
+    if cfg.input_mode in ("tokens", "tokens+image"):
+        params["embed"] = L.init_embedding(ks[1], V, d)
+    if cfg.rope_theta == 0 and cfg.uses_attention:
+        params["pos_embed"] = L.init_embedding(ks[2], 512, d)  # bert-style
+
+    ns, inner = _stack_info(cfg)
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        keys = jax.random.split(ks[3], ns)
+        params["stacked"] = {
+            "block": _vmap_init(partial(_init_attn_mlp_block, cfg=cfg), keys)
+        }
+    elif cfg.family == "ssm":
+        n_m = ns * inner
+        params["stacked"] = {
+            "mlstm": _vmap_init(
+                partial(_init_mlstm_block, cfg=cfg), jax.random.split(ks[3], n_m)
+            ),
+            "slstm": _vmap_init(
+                partial(_init_slstm_block, cfg=cfg), jax.random.split(ks[4], ns)
+            ),
+        }
+    elif cfg.family == "hybrid":
+        n_m = ns * inner
+        params["stacked"] = {
+            "mamba": _vmap_init(
+                partial(_init_mamba_block, cfg=cfg), jax.random.split(ks[3], n_m)
+            ),
+            "lora": _vmap_init(
+                partial(
+                    L.init_attention_lora, cfg=cfg, rank=cfg.shared_attn_lora_rank
+                ),
+                jax.random.split(ks[4], ns),
+            ),
+        }
+        params["shared"] = {"block": _init_attn_mlp_block(ks[5], cfg)}
+    else:
+        raise ValueError(cfg.family)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+
+
+def init_caches(cfg: ModelConfig, batch: int, capacity: int, dtype=jnp.bfloat16):
+    """Empty decode caches with time capacity ``capacity``."""
+    ns, inner = _stack_info(cfg)
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def attn_cache(n):
+        return {
+            "k": jnp.zeros((n, batch, capacity, KV, hd), dtype),
+            "v": jnp.zeros((n, batch, capacity, KV, hd), dtype),
+        }
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        layers = {"attn": attn_cache(ns)}
+    elif cfg.family == "hybrid":
+        d_in, H, P, N = S.mamba2_dims(cfg)
+        layers = {
+            "mamba": {
+                "ssm": jnp.zeros((ns, inner, batch, H, N, P), jnp.float32),
+                "conv": jnp.zeros(
+                    (ns, inner, batch, cfg.ssm_conv - 1, d_in + 2 * N), dtype
+                ),
+            },
+            "attn": attn_cache(ns),
+        }
+    elif cfg.family == "ssm":
+        d_in, H, P = S.mlstm_dims(cfg)
+        layers = {
+            "mlstm": {
+                "ssm": jnp.zeros((ns, inner, batch, H, P, P), jnp.float32),
+                "norm": jnp.zeros((ns, inner, batch, H, P, 1), jnp.float32),
+                "conv": jnp.zeros((ns, inner, batch, 3, d_in), dtype),
+            },
+            "slstm": {
+                "c": jnp.zeros((ns, batch, cfg.d_model), jnp.float32),
+                "n": jnp.full((ns, batch, cfg.d_model), 1e-6, jnp.float32),
+                "h": jnp.zeros((ns, batch, cfg.d_model), jnp.float32),
+                "m": jnp.zeros((ns, batch, cfg.d_model), jnp.float32),
+            },
+        }
+    else:
+        raise ValueError(cfg.family)
+    return {"layers": layers, "len": jnp.int32(0)}
+
+
+def _attn_layer_cache(layer_slice, length):
+    if layer_slice is None:
+        return None
+    return {"k": layer_slice["k"], "v": layer_slice["v"], "len": length}
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(cfg: ModelConfig, params, batch, dtype):
+    if cfg.input_mode == "embeddings":
+        x = batch["embeddings"].astype(dtype)
+    elif cfg.input_mode == "tokens+image":
+        tok = L.embed(params["embed"], batch["tokens"], dtype)
+        img = batch["image_embeds"].astype(dtype)
+        x = jnp.concatenate([img, tok], axis=1)
+    else:
+        x = L.embed(params["embed"], batch["tokens"], dtype)
+    if "pos_embed" in params:
+        Spos = x.shape[1]
+        x = x + params["pos_embed"]["table"][:Spos].astype(dtype)[None]
+    return x
+
+
+def forward(
+    cfg: ModelConfig,
+    params,
+    batch: dict,
+    *,
+    mode: str = "train",
+    caches: Optional[dict] = None,
+):
+    assert mode in ("train", "prefill", "decode")
+    dtype = jnp.dtype(cfg.dtype)
+    if mode == "decode":
+        assert caches is not None
+        if cfg.input_mode == "embeddings":
+            x = batch["embeddings"].astype(dtype)
+        else:
+            x = L.embed(params["embed"], batch["tokens"], dtype)
+        if "pos_embed" in params:
+            x = x + jnp.take(
+                params["pos_embed"]["table"].astype(dtype), caches["len"], axis=0
+            )[None, None]
+        pos_offset = caches["len"]
+    else:
+        x = _embed_inputs(cfg, params, batch, dtype)
+        pos_offset = 0
+    x = shard(x, "batch", "act_seq", "act_embed")
+
+    use_remat = mode == "train" and cfg.remat == "block"
+
+    def maybe_remat(fn):
+        if use_remat:
+            return jax.checkpoint(
+                fn, policy=jax.checkpoint_policies.nothing_saveable
+            )
+        return fn
+
+    cache_len = caches["len"] if caches is not None else None
+    layer_caches = caches["layers"] if caches is not None else None
+
+    ns, inner = _stack_info(cfg)
+    aux_total = jnp.float32(0.0)
+    new_layer_caches = None
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+
+        def body(carry, xs_in):
+            xc, aux = carry
+            bp = xs_in["p"]
+            c_in = _attn_layer_cache(xs_in.get("c"), cache_len)
+            xc, new_c, a = _apply_attn_mlp_block(
+                cfg, bp, xc, pos_offset=pos_offset, cache=c_in, mode=mode
+            )
+            ys = None
+            if new_c is not None:
+                ys = {"k": new_c["k"], "v": new_c["v"]}
+            return (xc, aux + a), ys
+
+        xs = {"p": params["stacked"]["block"]}
+        if mode == "decode":
+            xs["c"] = layer_caches["attn"]
+        (x, aux_total), ys = jax.lax.scan(maybe_remat(body), (x, aux_total), xs)
+        if mode in ("prefill", "decode"):
+            new_layer_caches = {"attn": ys}
+
+    elif cfg.family == "hybrid":
+        shared = params["shared"]["block"]
+
+        def super_body(carry, xs_in):
+            xc, aux = carry
+            mp = xs_in["mamba"]  # stacked (inner, ...)
+            lora = xs_in["lora"]
+
+            def inner_body(xc2, xs2):
+                c_in = xs2.get("c")
+                xc2, new_c = _apply_mamba_block(
+                    cfg, xs2["p"], xc2, cache=c_in, mode=mode
+                )
+                return xc2, new_c
+
+            inner_xs = {"p": mp}
+            if mode == "decode":
+                inner_xs["c"] = xs_in["mc"]
+            xc, mamba_ys = jax.lax.scan(inner_body, xc, inner_xs)
+
+            c_in = _attn_layer_cache(xs_in.get("ac"), cache_len)
+            xc, new_ac, a = _apply_attn_mlp_block(
+                cfg, shared, xc, pos_offset=pos_offset, cache=c_in, mode=mode,
+                lora=lora,
+            )
+            ys = {}
+            if mamba_ys is not None and mode in ("prefill", "decode"):
+                ys["mamba"] = mamba_ys
+            if new_ac is not None:
+                ys["attn"] = {"k": new_ac["k"], "v": new_ac["v"]}
+            return (xc, aux + a), (ys or None)
+
+        xs = {"mamba": _reshape_stack(params["stacked"]["mamba"], ns, inner),
+              "lora": params["stacked"]["lora"]}
+        if mode == "decode":
+            xs["mc"] = layer_caches["mamba"]
+            xs["ac"] = layer_caches["attn"]
+        (x, aux_total), ys = jax.lax.scan(maybe_remat(super_body), (x, aux_total), xs)
+        if mode in ("prefill", "decode"):
+            new_layer_caches = {"mamba": ys["mamba"], "attn": ys["attn"]}
+
+    elif cfg.family == "ssm":
+
+        def super_body(carry, xs_in):
+            xc, aux = carry
+
+            def inner_body(xc2, xs2):
+                xc2, new_c = _apply_mlstm_block(
+                    cfg, xs2["p"], xc2, cache=xs2.get("c"), mode=mode
+                )
+                return xc2, new_c
+
+            inner_xs = {"p": xs_in["mlstm"]}
+            if mode == "decode":
+                inner_xs["c"] = xs_in["mc"]
+            xc, mlstm_ys = jax.lax.scan(inner_body, xc, inner_xs)
+
+            sc = xs_in.get("sc")
+            xc, new_sc = _apply_slstm_block(cfg, xs_in["slstm"], xc, cache=sc, mode=mode)
+            ys = {}
+            if mode in ("prefill", "decode"):
+                ys["mlstm"] = mlstm_ys
+                ys["slstm"] = new_sc
+            return (xc, aux), (ys or None)
+
+        xs = {
+            "mlstm": _reshape_stack(params["stacked"]["mlstm"], ns, inner),
+            "slstm": params["stacked"]["slstm"],
+        }
+        if mode == "decode":
+            xs["mc"] = layer_caches["mlstm"]
+            xs["sc"] = layer_caches["slstm"]
+        (x, aux_total), ys = jax.lax.scan(maybe_remat(super_body), (x, aux_total), xs)
+        if mode in ("prefill", "decode"):
+            new_layer_caches = {"mlstm": ys["mlstm"], "slstm": ys["slstm"]}
+
+    else:
+        raise ValueError(cfg.family)
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+
+    if mode == "train":
+        return x, aux_total
+
+    new_len = (cache_len + 1) if mode == "decode" else jnp.int32(x.shape[1])
+    new_caches = {"layers": new_layer_caches, "len": new_len}
+    last = x[:, -1] if mode == "prefill" else x[:, 0]
+    logits = jnp.einsum(
+        "bd,vd->bv", last, params["out_head"]["table"].astype(last.dtype),
+        preferred_element_type=jnp.float32,
+    )
+    logits = shard(logits, "batch", "vocab")
+    return logits, new_caches
+
+
+def _reshape_stack(tree, ns: int, inner: int):
+    return jax.tree_util.tree_map(
+        lambda a: a.reshape(ns, inner, *a.shape[1:]), tree
+    )

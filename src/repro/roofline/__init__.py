@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    parse_collectives,
+    roofline_terms,
+    model_flops,
+    HW,
+)
+
+__all__ = ["parse_collectives", "roofline_terms", "model_flops", "HW"]

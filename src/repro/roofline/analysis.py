@@ -1,0 +1,155 @@
+"""Three-term roofline from a compiled dry-run artifact.
+
+    compute    = HLO_FLOPs_global  / (chips * peak_FLOP/s)
+    memory     = HLO_bytes_global  / (chips * HBM_bw)
+    collective = collective_bytes_global / (chips * link_bw)
+
+``cost_analysis`` on an SPMD-partitioned module reports *per-device*
+flops/bytes, so global = per_device * chips, and each term conveniently
+reduces to per_device / peak. Collective bytes are not in cost_analysis:
+we parse the optimized HLO (``compiled.as_text()``) and sum operand and
+result sizes of every collective op. Two variants are recorded:
+
+  * ``operand_bytes`` — literal sum of operand sizes (task-spec formula);
+  * ``wire_bytes``    — per-op estimate of bytes actually moved per device
+      (all-reduce ~ 2x operand for ring RS+AG; all-gather ~ result size;
+      reduce-scatter ~ operand; all-to-all / permute ~ operand),
+      which is what the roofline table uses (documented in EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+from typing import Dict, List
+
+from repro.config import ModelConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-like target (task-mandated constants)."""
+
+    peak_flops: float = 197e12  # bf16 / chip
+    hbm_bw: float = 819e9  # bytes/s / chip
+    ici_bw: float = 50e9  # bytes/s / link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|\w+\[[\d,]*\][^ ]*)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\("
+)
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims.strip():
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def parse_collectives(hlo_text: str) -> Dict:
+    """Per-device collective byte accounting from optimized HLO text."""
+    per_op: Dict[str, Dict[str, float]] = {}
+    ops: List[Dict] = []
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if m is None:
+            continue
+        if "-done(" in line:
+            continue
+        kind = m.group(1)
+        shapes = _SHAPE_RE.findall(line)
+        if not shapes:
+            continue
+        # result shapes appear before the op name, operands after
+        pre = line[: m.end()]
+        res_shapes = _SHAPE_RE.findall(pre)
+        opnd_shapes = shapes[len(res_shapes):]
+        res_b = sum(_shape_bytes(d, s) for d, s in res_shapes)
+        opnd_b = sum(_shape_bytes(d, s) for d, s in opnd_shapes)
+        if kind == "all-reduce":
+            wire = 2 * opnd_b
+        elif kind == "all-gather":
+            wire = res_b
+        else:  # reduce-scatter / all-to-all / collective-permute
+            wire = opnd_b
+        ops.append({"kind": kind, "operand_bytes": opnd_b,
+                    "result_bytes": res_b, "wire_bytes": wire})
+        agg = per_op.setdefault(kind, {"count": 0, "operand_bytes": 0,
+                                       "result_bytes": 0, "wire_bytes": 0})
+        agg["count"] += 1
+        agg["operand_bytes"] += opnd_b
+        agg["result_bytes"] += res_b
+        agg["wire_bytes"] += wire
+    total = {
+        "operand_bytes": sum(o["operand_bytes"] for o in ops),
+        "wire_bytes": sum(o["wire_bytes"] for o in ops),
+        "count": len(ops),
+    }
+    return {"per_kind": per_op, "total": total}
+
+
+def roofline_terms(
+    flops_per_device: float,
+    bytes_per_device: float,
+    wire_bytes_per_device: float,
+    hw: HW = HW(),
+) -> Dict[str, float]:
+    t_c = flops_per_device / hw.peak_flops
+    t_m = bytes_per_device / hw.hbm_bw
+    t_x = wire_bytes_per_device / hw.ici_bw
+    dom = max(("compute", t_c), ("memory", t_m), ("collective", t_x),
+              key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_x)
+    return {
+        "compute_s": t_c,
+        "memory_s": t_m,
+        "collective_s": t_x,
+        "dominant": dom,
+        "step_lower_bound_s": bound,
+        # fraction of the bound that is useful compute (roofline fraction)
+        "compute_fraction_of_bound": t_c / bound if bound > 0 else 0.0,
+    }
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Parameters touched per token (MoE: only routed experts)."""
+    n = cfg.num_params()
+    if cfg.num_experts:
+        per_mlp = (3 if cfg.gated_mlp else 2) * cfg.d_model * cfg.d_ff
+        total_exp = cfg.num_layers * cfg.num_experts * per_mlp
+        active_exp = cfg.num_layers * cfg.num_experts_per_token * per_mlp
+        n = n - total_exp + active_exp
+    return float(n)
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N_active·D (train) / 2·N_active·D (inference).
+
+    Embedding-table flops excluded (standard convention); attention
+    quadratic term reported separately in benchmarks where relevant.
+    """
+    n = active_params(cfg)
+    n -= cfg.padded_vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    tokens = shape.global_batch * (1 if shape.kind == "decode" else shape.seq_len)
+    mult = 6.0 if shape.kind == "train" else 2.0
+    return mult * n * tokens

@@ -1,0 +1,242 @@
+"""Netlist scheduling (§3.3): gate orderings fed to the accelerator model.
+
+  depth_first_order   — EMP-tool style (the builder's natural emission order)
+  full_reorder        — HAAC FR: global BFS levelization
+  segment_reorder     — HAAC SR: DF segments (half wire-memory each) with FR
+                        applied inside every segment
+  fine_grained_order  — APINT: DF segments + Critical-Path-First-Execution
+                        (recursive critical-path priorities [34, 35]) +
+                        cycle-accurate list scheduling inside each segment
+  coarse_grained_partition — APINT coarse scheduling: one independent unit
+                        operation (e.g. a softmax row) per core
+
+All return gate-index permutations of the netlist (and per-core lists for
+the coarse partition); correctness = every permutation is topological.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.netlist import Netlist, OP_AND, OP_INV, OP_XOR
+
+# cycle weights (the paper's PE latencies, evaluation)
+GATE_CYCLES = {OP_AND: 18, OP_XOR: 1, OP_INV: 1}
+
+
+def depth_first_order(net: Netlist) -> np.ndarray:
+    return np.arange(net.num_gates, dtype=np.int64)
+
+
+def full_reorder(net: Netlist) -> np.ndarray:
+    levels = net.levels()
+    if not levels:
+        return np.empty(0, np.int64)
+    return np.concatenate(levels).astype(np.int64)
+
+
+def _segments(net: Netlist, seg_gates: int) -> List[np.ndarray]:
+    order = np.arange(net.num_gates, dtype=np.int64)
+    return [order[i: i + seg_gates] for i in range(0, len(order), seg_gates)]
+
+
+def segment_reorder(net: Netlist, seg_gates: int) -> np.ndarray:
+    """HAAC SR: FR (levelize) within each DF segment."""
+    out = []
+    for seg in _segments(net, seg_gates):
+        out.append(_levelize_subset(net, seg))
+    return np.concatenate(out) if out else np.empty(0, np.int64)
+
+
+def _levelize_subset(net: Netlist, seg: np.ndarray) -> np.ndarray:
+    """BFS levels of the sub-DAG induced by `seg` (external inputs ready)."""
+    in_seg = {int(g): i for i, g in enumerate(seg)}
+    prod = {}  # wire -> producing gate within segment
+    for g in seg:
+        prod[int(net.out[g])] = int(g)
+    level: Dict[int, int] = {}
+    order = []
+    for g in seg:
+        gi = int(g)
+        lv = 0
+        for w in (net.in0[gi], net.in1[gi]):
+            pw = prod.get(int(w))
+            if pw is not None:
+                lv = max(lv, level[pw] + 1)
+        level[gi] = lv
+    segl = sorted((level[int(g)], int(g)) for g in seg)
+    return np.array([g for _, g in segl], dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# CPFE (fine-grained)
+# ---------------------------------------------------------------------------
+
+
+def _cpfe_priorities(net: Netlist, seg: np.ndarray) -> Dict[int, int]:
+    """Recursive critical-path priorities within one segment.
+
+    Lower rank = scheduled first among operable gates.
+    """
+    seg = [int(g) for g in seg]
+    seg_set = set(seg)
+    prod = {int(net.out[g]): g for g in seg}
+    children: Dict[int, List[int]] = {g: [] for g in seg}
+    parents: Dict[int, List[int]] = {g: [] for g in seg}
+    for g in seg:
+        for w in (int(net.in0[g]), int(net.in1[g])):
+            p = prod.get(w)
+            if p is not None and p != g:
+                parents[g].append(p)
+                children[p].append(g)
+
+    weight = {g: GATE_CYCLES[int(net.op[g])] for g in seg}
+    rank: Dict[int, int] = {}
+    counter = [0]
+
+    def longest_path(nodes: List[int]) -> List[int]:
+        """Critical (max-weight) path within `nodes` (already topological)."""
+        nset = set(nodes)
+        dist: Dict[int, int] = {}
+        pred: Dict[int, int] = {}
+        best, best_d = None, -1
+        for g in nodes:  # nodes kept in topological (emission) order
+            d = weight[g]
+            for p in parents[g]:
+                if p in nset and dist.get(p, -1) + weight[g] > d:
+                    d = dist[p] + weight[g]
+                    pred[g] = p
+            dist[g] = d
+            if d > best_d:
+                best, best_d = g, d
+        path = []
+        cur = best
+        while cur is not None:
+            path.append(cur)
+            cur = pred.get(cur)
+        return list(reversed(path))
+
+    def descendants(g: int, allowed: set) -> List[int]:
+        out, stack, seen = [], [c for c in children[g]], set()
+        while stack:
+            n = stack.pop()
+            if n in seen or n not in allowed or n in rank:
+                continue
+            seen.add(n)
+            out.append(n)
+            stack.extend(children[n])
+        return sorted(out)  # emission order = topological
+
+    def assign(nodes: List[int]):
+        nodes = [n for n in nodes if n not in rank]
+        if not nodes:
+            return
+        path = longest_path(nodes)
+        for g in path:
+            if g not in rank:
+                rank[g] = counter[0]
+                counter[0] += 1
+        allowed = set(nodes)
+        for g in path:
+            sub = descendants(g, allowed)
+            assign(sub)
+
+    assign(seg)
+    for g in seg:  # stragglers (disconnected)
+        if g not in rank:
+            rank[g] = counter[0]
+            counter[0] += 1
+    return rank
+
+
+def fine_grained_order(net: Netlist, seg_gates: int) -> np.ndarray:
+    """Segmentation + CPFE + cycle-accurate list scheduling (§3.3.2)."""
+    out = []
+    for seg in _segments(net, seg_gates):
+        rank = _cpfe_priorities(net, seg)
+        order = _list_schedule(net, seg, rank)
+        out.append(order)
+    return np.concatenate(out) if out else np.empty(0, np.int64)
+
+
+def _list_schedule(net: Netlist, seg: np.ndarray, rank: Dict[int, int]) -> np.ndarray:
+    """Pick the operable gate with the best CPFE rank each issue slot,
+    modeling the PE latency: a gate's output is ready `GATE_CYCLES` after
+    issue; a gate is operable when both in-segment producers are done."""
+    import heapq
+
+    seg = [int(g) for g in seg]
+    prod = {int(net.out[g]): g for g in seg}
+    remaining: Dict[int, int] = {}
+    children: Dict[int, List[int]] = {g: [] for g in seg}
+    for g in seg:
+        deps = 0
+        for w in (int(net.in0[g]), int(net.in1[g])):
+            p = prod.get(w)
+            if p is not None and p != g:
+                deps += 1
+                children[p].append(g)
+        if int(net.op[g]) == OP_INV:
+            # single input counted twice when in1 == in0
+            pass
+        remaining[g] = deps
+
+    ready = [(rank[g], g) for g in seg if remaining[g] == 0]
+    heapq.heapify(ready)
+    # events: (completion_time, gate)
+    t = 0
+    order = []
+    pending: List[Tuple[int, int]] = []
+    done = set()
+    while ready or pending:
+        if ready:
+            _, g = heapq.heappop(ready)
+            t += 1  # one issue slot per cycle
+            fin = t + GATE_CYCLES[int(net.op[g])]
+            heapq.heappush(pending, (fin, g))
+            order.append(g)
+        else:
+            # stall until next completion
+            fin, g = heapq.heappop(pending)
+            t = max(t, fin)
+            done.add(g)
+            for c in children[g]:
+                remaining[c] -= 1
+                if remaining[c] == 0:
+                    heapq.heappush(ready, (rank[c], c))
+            continue
+        # retire completions at current time
+        while pending and pending[0][0] <= t:
+            fin, g2 = heapq.heappop(pending)
+            done.add(g2)
+            for c in children[g2]:
+                remaining[c] -= 1
+                if remaining[c] == 0:
+                    heapq.heappush(ready, (rank[c], c))
+    return np.array(order, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# coarse-grained partition
+# ---------------------------------------------------------------------------
+
+
+def coarse_grained_partition(nets: Sequence[Netlist], num_cores: int
+                             ) -> List[List[int]]:
+    """Map independent unit operations (row circuits) onto cores
+    round-robin: core i gets rows i, i+C, ... (§3.3.1)."""
+    assign: List[List[int]] = [[] for _ in range(num_cores)]
+    for i in range(len(nets)):
+        assign[i % num_cores].append(i)
+    return assign
+
+
+def check_topological(net: Netlist, order: np.ndarray) -> bool:
+    pos = {int(net.out[g]): i for i, g in enumerate(order)}
+    for i, g in enumerate(order):
+        for w in (int(net.in0[g]), int(net.in1[g])):
+            if w in pos and pos[w] > i:
+                return False
+    return True

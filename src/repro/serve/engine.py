@@ -1,0 +1,93 @@
+"""Batched serving: prefill + decode with KV caches.
+
+The engine compiles one prefill function (fixed prompt length buckets) and
+one decode function (batch-static), serving request batches greedily. On
+the production mesh the same functions lower with the decode sharding
+rules (launch/steps.build_*); here they also run eagerly on CPU for tests
+and the quickstart example.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ModelConfig
+from repro.models.transformer import forward, init_caches
+
+
+@dataclass
+class Request:
+    prompt: np.ndarray  # (S,) int32
+    max_new_tokens: int = 16
+    out_tokens: Optional[List[int]] = None
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, capacity: int = 256,
+                 batch: int = 4):
+        self.cfg = cfg
+        self.params = params
+        self.capacity = capacity
+        self.batch = batch
+
+        def prefill(params, batch_in):
+            return forward(cfg, params, batch_in, mode="prefill")
+
+        def decode(params, batch_in, caches):
+            return forward(cfg, params, batch_in, mode="decode", caches=caches)
+
+        self._prefill = jax.jit(prefill)
+        self._decode = jax.jit(decode, donate_argnums=(2,))
+
+    def _grow_caches(self, caches, target: int):
+        """Copy prefill caches into capacity-sized buffers."""
+        def grow(x):
+            if x.ndim >= 3 and x.shape[2] == int(caches["len"]):
+                pad = [(0, 0)] * x.ndim
+                pad[2] = (0, self.capacity - x.shape[2])
+                return jnp.pad(x, pad)
+            return x
+
+        layers = caches["layers"]
+        if self.cfg.uses_attention:
+            layers = dict(layers)
+            layers["attn"] = {
+                k: jnp.pad(
+                    v, [(0, 0), (0, 0), (0, self.capacity - v.shape[2]),
+                        (0, 0), (0, 0)]
+                )
+                for k, v in layers["attn"].items()
+            }
+        return {"layers": layers, "len": caches["len"]}
+
+    def generate(self, requests: List[Request], greedy: bool = True
+                 ) -> List[Request]:
+        """Serve a batch of same-length-prompt requests."""
+        assert len(requests) <= self.batch
+        reqs = list(requests)
+        S = len(reqs[0].prompt)
+        assert all(len(r.prompt) == S for r in reqs), "bucket by length"
+        B = len(reqs)
+        toks = np.stack([r.prompt for r in reqs]).astype(np.int32)
+        logits, caches = self._prefill(self.params, {"tokens": jnp.asarray(toks)})
+        caches = self._grow_caches(caches, self.capacity)
+        out = [[] for _ in reqs]
+        cur = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab_size], -1))
+        for i in range(B):
+            out[i].append(int(cur[i]))
+        steps = max(r.max_new_tokens for r in reqs) - 1
+        for _ in range(max(steps, 0)):
+            batch_in = {"tokens": jnp.asarray(cur[:, None].astype(np.int32))}
+            logits, caches = self._decode(self.params, batch_in, caches)
+            cur = np.asarray(jnp.argmax(logits[:, : self.cfg.vocab_size], -1))
+            for i in range(B):
+                if len(out[i]) < reqs[i].max_new_tokens:
+                    out[i].append(int(cur[i]))
+        for r, o in zip(reqs, out):
+            r.out_tokens = o
+        return reqs

@@ -1,0 +1,60 @@
+"""Sequence-chunked cross-entropy so (B, S, V) logits are never resident.
+
+The unembed + logsumexp for each sequence chunk runs under
+``jax.checkpoint`` so the backward pass recomputes chunk logits instead of
+saving them — peak memory is one (B, S/nc, V_shard) buffer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.models.sharding import shard
+
+
+def chunked_lm_loss(cfg: ModelConfig, out_head, hidden, labels, *, z_coef=1e-4,
+                    num_chunks: int = 0):
+    """hidden (B,S,d) -> (mean_nll, metrics). labels: int32, -1 = ignored.
+
+    Labels index the *unpadded* vocab; padded logits rows can never win.
+    """
+    B, S, d = hidden.shape
+    if num_chunks <= 0:
+        num_chunks = max(1, S // 1024)
+    while S % num_chunks != 0:
+        num_chunks -= 1
+    sc = S // num_chunks
+    table = out_head["table"]
+
+    hs = hidden.reshape(B, num_chunks, sc, d)
+    ls = labels.reshape(B, num_chunks, sc)
+
+    def chunk_loss(h, lab):
+        logits = jnp.einsum(
+            "bsd,vd->bsv", h, table.astype(h.dtype),
+            preferred_element_type=jnp.float32,
+        )
+        logits = shard(logits, "batch", None, "vocab")
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lab, 0)
+        picked = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        nll = logz - picked
+        mask = (lab >= 0).astype(jnp.float32)
+        zl = z_coef * jnp.square(logz)
+        return jnp.sum((nll + zl) * mask), jnp.sum(mask)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, xs):
+        tot, cnt = carry
+        h, lab = xs
+        s, c = chunk_loss(h, lab)
+        return (tot + s, cnt + c), None
+
+    hs_t = jnp.moveaxis(hs, 1, 0)  # (nc, B, sc, d)
+    ls_t = jnp.moveaxis(ls, 1, 0)
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.float32(0), jnp.float32(0)), (hs_t, ls_t))
+    mean = tot / jnp.maximum(cnt, 1.0)
+    return mean, {"tokens": cnt}

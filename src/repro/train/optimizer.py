@@ -1,0 +1,100 @@
+"""AdamW with linear-warmup cosine decay, implemented directly on pytrees.
+
+Optimizer state shards exactly like the parameters (same tree structure),
+so FSDP sharding of params automatically shards m/v — ZeRO-style.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import TrainConfig
+
+
+def init_opt_state(params):
+    zeros = lambda p: jnp.zeros_like(p)
+    return {
+        "m": jax.tree_util.tree_map(zeros, params),
+        "v": jax.tree_util.tree_map(zeros, params),
+    }
+
+
+def lr_schedule(tc: TrainConfig, step):
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(tc.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - tc.warmup_steps) / jnp.maximum(tc.total_steps - tc.warmup_steps, 1),
+        0.0,
+        1.0,
+    )
+    cos = 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    return tc.learning_rate * warm * (0.1 + 0.9 * cos)
+
+
+def _decay_mask(path: str) -> bool:
+    """Weight decay on matrices only (no norms / biases / vectors)."""
+    leaf = path.split("/")[-1]
+    return leaf not in ("scale", "bias", "a_log", "dt_bias", "d_skip", "m", "v")
+
+
+def _tree_map_with_path(fn, *trees):
+    def rec(prefix, *ts):
+        if isinstance(ts[0], dict):
+            return {k: rec(prefix + "/" + str(k), *[t[k] for t in ts]) for k in ts[0]}
+        return fn(prefix, *ts)
+
+    return rec("", *trees)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )
+
+
+def adamw_update(
+    tc: TrainConfig, params, grads, opt_state, step
+) -> Tuple[dict, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics). All f32."""
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, tc.grad_clip / jnp.maximum(gnorm, 1e-9))
+    lr = lr_schedule(tc, step)
+    t = step.astype(jnp.float32) + 1.0
+    bc1 = 1.0 - tc.beta1 ** t
+    bc2 = 1.0 - tc.beta2 ** t
+
+    def upd(path, p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m_new = tc.beta1 * m + (1 - tc.beta1) * g
+        v_new = tc.beta2 * v + (1 - tc.beta2) * jnp.square(g)
+        mhat = m_new / bc1
+        vhat = v_new / bc2
+        delta = mhat / (jnp.sqrt(vhat) + tc.eps)
+        if _decay_mask(path) and p.ndim >= 2:
+            delta = delta + tc.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return p_new.astype(p.dtype), m_new, v_new
+
+    out = _tree_map_with_path(
+        lambda path, p, g, m, v: upd(path, p, g, m, v),
+        params,
+        grads,
+        opt_state["m"],
+        opt_state["v"],
+    )
+    new_params = jax.tree_util.tree_map(
+        lambda x: x[0], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_m = jax.tree_util.tree_map(
+        lambda x: x[1], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    new_v = jax.tree_util.tree_map(
+        lambda x: x[2], out, is_leaf=lambda x: isinstance(x, tuple)
+    )
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v}, metrics

@@ -1,0 +1,18 @@
+import logging
+import sys
+
+_CONFIGURED = False
+
+
+def get_logger(name: str = "repro") -> logging.Logger:
+    global _CONFIGURED
+    if not _CONFIGURED:
+        handler = logging.StreamHandler(sys.stderr)
+        handler.setFormatter(
+            logging.Formatter("%(asctime)s %(name)s %(levelname)s %(message)s", "%H:%M:%S")
+        )
+        root = logging.getLogger("repro")
+        root.addHandler(handler)
+        root.setLevel(logging.INFO)
+        _CONFIGURED = True
+    return logging.getLogger(name)

@@ -1,0 +1,87 @@
+"""Config registry + assigned architecture invariants."""
+
+import pytest
+
+from repro.config import (
+    SHAPES,
+    assigned_shapes,
+    get_config,
+    list_configs,
+    reduced_config,
+)
+
+ASSIGNED = [
+    "olmoe-1b-7b", "llama4-scout-17b-a16e", "llama3.2-1b", "deepseek-67b",
+    "qwen3-1.7b", "smollm-360m", "musicgen-medium", "xlstm-125m",
+    "zamba2-2.7b", "internvl2-26b",
+]
+
+# (layers, d_model, heads, kv, d_ff, vocab) from the assignment table
+EXPECTED = {
+    "olmoe-1b-7b": (16, 2048, 16, 16, 1024, 50304),
+    "llama4-scout-17b-a16e": (48, 5120, 40, 8, 8192, 202048),
+    "llama3.2-1b": (16, 2048, 32, 8, 8192, 128256),
+    "deepseek-67b": (95, 8192, 64, 8, 22016, 102400),
+    "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+    "smollm-360m": (32, 960, 15, 5, 2560, 49152),
+    "musicgen-medium": (48, 1536, 24, 24, 6144, 2048),
+    "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+    "zamba2-2.7b": (54, 2560, 32, 32, 10240, 32000),
+    "internvl2-26b": (48, 6144, 48, 8, 16384, 92553),
+}
+
+
+def test_all_assigned_registered():
+    names = list_configs()
+    for a in ASSIGNED:
+        assert a in names
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_exact_dims(arch):
+    c = get_config(arch)
+    assert (
+        c.num_layers, c.d_model, c.num_heads, c.num_kv_heads, c.d_ff,
+        c.vocab_size,
+    ) == EXPECTED[arch]
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_padded_vocab_shards(arch):
+    c = get_config(arch)
+    assert c.padded_vocab % 128 == 0
+    assert c.padded_vocab >= c.vocab_size
+
+
+def test_long_500k_only_subquadratic():
+    for arch in ASSIGNED:
+        c = get_config(arch)
+        names = [s.name for s in assigned_shapes(c)]
+        if c.family in ("ssm", "hybrid"):
+            assert "long_500k" in names, arch
+        else:
+            assert "long_500k" not in names, arch
+
+
+def test_total_cells():
+    # 10 archs x 4 shapes = 40 cells; 8 long_500k skips are documented
+    total = sum(len(assigned_shapes(get_config(a))) for a in ASSIGNED)
+    assert total == 32
+    assert 10 * len(SHAPES) == 40
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_reduced_config_preserves_structure(arch):
+    c = get_config(arch)
+    r = reduced_config(c)
+    assert r.family == c.family
+    assert (r.num_experts > 0) == (c.num_experts > 0)
+    assert r.qk_norm == c.qk_norm
+    assert r.input_mode == c.input_mode
+    assert r.num_heads % r.num_kv_heads == 0
+
+
+def test_param_counts_sane():
+    assert abs(get_config("deepseek-67b").num_params() / 67e9 - 1) < 0.05
+    assert abs(get_config("smollm-360m").num_params() / 0.41e9 - 1) < 0.15
+    assert abs(get_config("olmoe-1b-7b").num_params() / 6.9e9 - 1) < 0.1

@@ -1,0 +1,163 @@
+"""Garbled-circuit correctness: hypothesis property tests on random
+circuits + arithmetic circuit properties + Bristol roundtrip."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circuits import arith, bristol
+from repro.core.circuits.builder import CircuitBuilder
+from repro.core.garble import run_garbled
+from repro.core.netlist import OP_AND, OP_INV, OP_XOR
+
+
+def _rand_circuit(draw_ops, n_g=4, n_e=4):
+    cb = CircuitBuilder("h")
+    g = [cb.g_input() for _ in range(n_g)]
+    e = [cb.e_input() for _ in range(n_e)]
+    pool = g + e + [cb.constant(0), cb.constant(1)]
+    for op, a, b in draw_ops:
+        a %= len(pool)
+        b %= len(pool)
+        if op == 0:
+            pool.append(cb.AND(pool[a], pool[b]))
+        elif op == 1:
+            pool.append(cb.XOR(pool[a], pool[b]))
+        else:
+            pool.append(cb.INV(pool[a]))
+    cb.output(pool[-min(8, len(pool)):])
+    return cb.build()
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 2), st.integers(0, 1000), st.integers(0, 1000)),
+        min_size=5, max_size=60,
+    ),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_garbled_equals_plaintext(ops, seed):
+    net = _rand_circuit(ops)
+    rng = np.random.default_rng(seed)
+    I = 3
+    gb = rng.integers(0, 2, (I, len(net.garbler_inputs)))
+    eb = rng.integers(0, 2, (I, len(net.evaluator_inputs)))
+    want = net.eval_plain(gb, eb)
+    got = run_garbled(net, jax.random.PRNGKey(seed), gb, eb, impl="ref")
+    assert np.array_equal(want, got)
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.integers(0, 2**16 - 1), b=st.integers(0, 2**16 - 1))
+def test_adder_property(a, b):
+    cb = CircuitBuilder()
+    wa = cb.g_input_word(16)
+    wb = cb.e_input_word(16)
+    cb.output(arith.add(cb, wa, wb))
+    net = cb.build()
+    bits = lambda v: [(v >> i) & 1 for i in range(16)]
+    out = net.eval_plain([bits(a)], [bits(b)])
+    got = sum(int(x) << i for i, x in enumerate(out[0]))
+    assert got == (a + b) % (1 << 16)
+    assert net.and_count == 15  # optimal ripple adder
+
+
+@settings(max_examples=20, deadline=None)
+@given(a=st.integers(0, 2**12 - 1), b=st.integers(0, 2**12 - 1))
+def test_xfbq_identity_property(a, b):
+    """XFBQ(x) represents x + INV(lsb x); the product identity holds."""
+    k = 12
+    cb = CircuitBuilder()
+    wa = cb.g_input_word(k)
+    wb = cb.e_input_word(k)
+    cb.output(arith.mul_xfbq(cb, wa, wb, qerror_terms=True))
+    net = cb.build()
+    bits = lambda v: [(v >> i) & 1 for i in range(k)]
+    out = net.eval_plain([bits(a)], [bits(b)])
+    got = sum(int(x) << i for i, x in enumerate(out[0]))
+    assert got == (a * b) % (1 << k)
+
+
+@settings(max_examples=10, deadline=None)
+@given(a=st.integers(0, 2**10 - 1), b=st.integers(0, 2**10 - 1))
+def test_comparator_mux(a, b):
+    cb = CircuitBuilder()
+    wa = cb.g_input_word(10)
+    wb = cb.e_input_word(10)
+    lt = arith.lt_unsigned(cb, wa, wb)
+    cb.output(arith.mux(cb, lt, wb, wa))  # max(a, b)
+    net = cb.build()
+    bits = lambda v: [(v >> i) & 1 for i in range(10)]
+    out = net.eval_plain([bits(a)], [bits(b)])
+    got = sum(int(x) << i for i, x in enumerate(out[0]))
+    assert got == max(a, b)
+
+
+def test_and_reduction_xfbq_64b():
+    """Fig. 5(b): XFBQ cuts 64-bit multiplier ANDs by ~39-50%."""
+    k = 64
+    counts = {}
+    for style, qe in [("conventional", False), ("xfbq", False), ("xfbq", True)]:
+        cb = CircuitBuilder()
+        a = cb.g_input_word(k)
+        b = cb.e_input_word(k)
+        cb.output(arith.mul(cb, a, b, style=style, qerror_terms=qe))
+        counts[(style, qe)] = cb.build().and_count
+    base = counts[("conventional", False)]
+    red_noq = 1 - counts[("xfbq", False)] / base
+    red_q = 1 - counts[("xfbq", True)] / base
+    assert 0.35 < red_noq < 0.60, red_noq
+    assert 0.30 < red_q < 0.55, red_q
+    assert red_q < red_noq  # q-error terms cost extra ANDs
+
+
+def test_garble_batched_instances(rng):
+    """Instance batching (coarse-grained rows) garbles independently."""
+    cb = CircuitBuilder()
+    a = cb.g_input_word(8)
+    b = cb.e_input_word(8)
+    cb.output(arith.add(cb, a, b))
+    net = cb.build()
+    I = 16
+    av = rng.integers(0, 256, I)
+    bv = rng.integers(0, 256, I)
+    gb = (av[:, None] >> np.arange(8)) & 1
+    eb = (bv[:, None] >> np.arange(8)) & 1
+    out = run_garbled(net, jax.random.PRNGKey(7), gb, eb, impl="ref")
+    got = (out.astype(np.int64) << np.arange(8)).sum(1)
+    assert np.array_equal(got, (av + bv) % 256)
+
+
+def test_bristol_roundtrip(rng):
+    cb = CircuitBuilder("rt")
+    a = cb.g_input_word(6)
+    b = cb.e_input_word(6)
+    s = arith.add(cb, a, b)
+    m = arith.mux(cb, arith.lt_unsigned(cb, a, b), s, a)
+    cb.output(m)
+    net = cb.build()
+    text = bristol.emit(net)
+    net2 = bristol.parse(text, "rt2")
+    assert net2.and_count == net.and_count
+    assert net2.num_gates == net.num_gates
+    for _ in range(5):
+        av, bv = rng.integers(0, 64, 2)
+        bits = lambda v: [(int(v) >> i) & 1 for i in range(6)]
+        o1 = net.eval_plain([bits(av)], [bits(bv)])
+        o2 = net2.eval_plain([bits(av)], [bits(bv)])
+        assert np.array_equal(o1, o2)
+
+
+def test_inv_and_const_are_free():
+    cb = CircuitBuilder()
+    a = cb.g_input()
+    x = cb.INV(a)
+    y = cb.XOR(x, cb.constant(1))  # == a, folded
+    z = cb.AND(y, cb.constant(1))  # == y, folded
+    cb.output(z)
+    net = cb.build()
+    assert net.and_count == 0
+    out = net.eval_plain([[1]], np.zeros((1, 0)))
+    assert out[0][0] == 1

@@ -1,0 +1,91 @@
+"""BFV-lite: exactness of enc/dec and the homomorphic surface."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import he as HE
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    p = HE.make_params(n=256, log_q=30, num_primes=3, t_bits=26)
+    s, pk = HE.keygen(p, jax.random.PRNGKey(0))
+    return p, s, pk
+
+
+def test_slot_roundtrip(ctx, rng):
+    p, s, pk = ctx
+    v = rng.integers(0, p.t, p.n)
+    ct = HE.encrypt(p, pk, HE.encode_slots(p, v), jax.random.PRNGKey(1))
+    dec = HE.decode_slots(p, HE.decrypt(p, s, ct))
+    assert np.array_equal(dec, v % p.t)
+
+
+def test_homomorphic_add(ctx, rng):
+    p, s, pk = ctx
+    v1 = rng.integers(0, p.t, p.n)
+    v2 = rng.integers(0, p.t, p.n)
+    ct1 = HE.encrypt(p, pk, HE.encode_slots(p, v1), jax.random.PRNGKey(2))
+    ct2 = HE.encrypt(p, pk, HE.encode_slots(p, v2), jax.random.PRNGKey(3))
+    dec = HE.decode_slots(p, HE.decrypt(p, s, HE.add_ct(p, ct1, ct2)))
+    assert np.array_equal(dec, (v1 + v2) % p.t)
+
+
+def test_slotwise_plain_mult(ctx, rng):
+    p, s, pk = ctx
+    v = rng.integers(0, p.t, p.n)
+    w = rng.integers(0, 1 << 12, p.n)  # bounded plaintext magnitude
+    ct = HE.encrypt(p, pk, HE.encode_slots(p, v), jax.random.PRNGKey(4))
+    ctw = HE.mul_plain(p, ct, HE.encode_slots(p, w))
+    dec = HE.decode_slots(p, HE.decrypt(p, s, ctw))
+    assert np.array_equal(
+        dec.astype(object), (v.astype(object) * w.astype(object)) % p.t
+    )
+
+
+def test_add_plain(ctx, rng):
+    p, s, pk = ctx
+    v = rng.integers(0, p.t, p.n)
+    w = rng.integers(0, p.t, p.n)
+    ct = HE.encrypt(p, pk, HE.encode_slots(p, v), jax.random.PRNGKey(5))
+    ct2 = HE.add_plain(p, ct, HE.encode_slots(p, w))
+    dec = HE.decode_slots(p, HE.decrypt(p, s, ct2))
+    assert np.array_equal(dec, (v + w) % p.t)
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 1000))
+def test_matvec_property(ctx, seed):
+    p, s, pk = ctx
+    rng = np.random.default_rng(seed)
+    d_in, d_out = 16, 11
+    r = rng.integers(0, p.t, d_in)
+    W = rng.integers(-100, 100, (d_out, d_in))
+    ctr = HE.encrypt(p, pk, HE.encode_coeffs(p, r), jax.random.PRNGKey(seed))
+    outs = HE.he_matvec(p, ctr, W)
+    polys = [HE.decrypt(p, s, c) for c in outs]
+    got = HE.he_matvec_extract(p, polys, d_in, d_out)
+    want = (W.astype(object) @ r.astype(object)) % p.t
+    assert np.array_equal(got.astype(object), want)
+
+
+def test_signed_centering_keeps_noise_small(ctx, rng):
+    """Negative plaintexts (residues near t) must not blow up noise."""
+    p, s, pk = ctx
+    v = rng.integers(0, p.t, p.n)
+    w_signed = rng.integers(-2000, 2000, p.n)
+    ct = HE.encrypt(p, pk, HE.encode_slots(p, v), jax.random.PRNGKey(7))
+    ctw = HE.mul_plain(p, ct, HE.encode_slots(p, np.mod(w_signed, p.t)))
+    dec = HE.decode_slots(p, HE.decrypt(p, s, ctw))
+    want = (v.astype(object) * np.mod(w_signed, p.t).astype(object)) % p.t
+    assert np.array_equal(dec.astype(object), want)
+
+
+def test_params_validity():
+    p = HE.make_params(n=256, num_primes=3, t_bits=30)
+    for q in p.qs:
+        assert q % (2 * p.n) == 1
+    assert p.t % (2 * p.n) == 1
+    assert p.t not in p.qs

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.halfgate import ref as HR
+from repro.kernels.halfgate import ref_np as HN
+from repro.kernels.halfgate.halfgate import eval_pallas, garble_pallas
+from repro.kernels.label_select import ref as LR
+from repro.kernels.label_select.label_select import select_labels_pallas
+from repro.kernels.ntt import ref as NR
+from repro.kernels.ntt.ntt import ntt_pallas
+
+
+def _labels(key, g):
+    return jax.random.bits(key, (g, 4), dtype=jnp.uint32)
+
+
+@pytest.mark.parametrize("g", [1, 7, 64, 513, 4096])
+def test_halfgate_garble_sweep(g):
+    ks = jax.random.split(jax.random.PRNGKey(g), 4)
+    a0, b0, r = _labels(ks[0], g), _labels(ks[1], g), _labels(ks[2], g)
+    tw = jnp.arange(g, dtype=jnp.uint32)
+    ref = HR.garble_and_gates(a0, b0, r, tw)
+    pal = garble_pallas(a0, b0, r, tw, interpret=True)
+    for x, y in zip(ref, pal):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("g", [1, 65, 2048])
+def test_halfgate_eval_sweep(g):
+    ks = jax.random.split(jax.random.PRNGKey(g + 99), 4)
+    a0, b0, r = _labels(ks[0], g), _labels(ks[1], g), _labels(ks[2], g)
+    tw = jnp.arange(g, dtype=jnp.uint32)
+    _, tg, te = HR.garble_and_gates(a0, b0, r, tw)
+    ref = HR.eval_and_gates(a0, b0, tg, te, tw)
+    pal = eval_pallas(a0, b0, tg, te, tw, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))
+
+
+def test_halfgate_numpy_mirror():
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    g = 777
+    a0, b0, r = _labels(ks[0], g), _labels(ks[1], g), _labels(ks[2], g)
+    tw = jnp.arange(g, dtype=jnp.uint32)
+    jr = HR.garble_and_gates(a0, b0, r, tw)
+    nr = HN.garble_and_gates(np.asarray(a0), np.asarray(b0), np.asarray(r),
+                             np.asarray(tw))
+    for x, y in zip(jr, nr):
+        np.testing.assert_array_equal(np.asarray(x), y)
+
+
+def test_halfgate_correctness_semantics():
+    """Evaluated label equals the garbler's label for a AND b."""
+    g = 256
+    ks = jax.random.split(jax.random.PRNGKey(11), 5)
+    a0, b0 = _labels(ks[0], g), _labels(ks[1], g)
+    r = jax.random.bits(ks[2], (1, 4), dtype=jnp.uint32)
+    r = r.at[..., 0].set(r[..., 0] | jnp.uint32(1))
+    r = jnp.broadcast_to(r, (g, 4))
+    tw = jnp.arange(g, dtype=jnp.uint32)
+    c0, tg, te = HR.garble_and_gates(a0, b0, r, tw)
+    for abit in (0, 1):
+        for bbit in (0, 1):
+            a = a0 ^ (r * abit)
+            b = b0 ^ (r * bbit)
+            c = HR.eval_and_gates(a, b, tg, te, tw)
+            want = c0 ^ (r * (abit & bbit))
+            np.testing.assert_array_equal(np.asarray(c), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [64, 256, 1024, 4096])
+def test_ntt_pallas_sweep(n):
+    q = NR.find_ntt_primes(16, 1, n, max_q=NR.INT32_PRODUCT_BOUND)[0]
+    a = np.random.default_rng(n).integers(0, q, (3, n)).astype(np.int64)
+    fwd_ref = np.asarray(NR.ntt_forward(jnp.asarray(a.astype(np.uint64)), q, n))
+    fwd_pal = np.asarray(
+        ntt_pallas(jnp.asarray(a, jnp.int32), q, n, interpret=True)
+    ).astype(np.uint64)
+    np.testing.assert_array_equal(fwd_ref, fwd_pal)
+    back = np.asarray(
+        ntt_pallas(jnp.asarray(fwd_pal.astype(np.int64), jnp.int32), q, n,
+                   inverse=True, interpret=True)
+    ).astype(np.uint64)
+    np.testing.assert_array_equal(back, a.astype(np.uint64))
+
+
+@pytest.mark.parametrize("n,q_bits", [(256, 13), (256, 14), (1024, 14)])
+def test_ntt_convolution_theorem(n, q_bits):
+    q = NR.find_ntt_primes(q_bits, 1, n)[0]
+    rng = np.random.default_rng(1)
+    a = rng.integers(0, q, n).astype(np.uint64)
+    b = rng.integers(0, q, n).astype(np.uint64)
+    fast = np.asarray(NR.negacyclic_mul(jnp.asarray(a), jnp.asarray(b), q, n))
+    naive = NR.negacyclic_mul_naive(a, b, q, n)
+    np.testing.assert_array_equal(fast, naive)
+
+
+@pytest.mark.parametrize("g", [3, 100, 4097])
+def test_label_select_sweep(g):
+    key = jax.random.PRNGKey(g)
+    ks = jax.random.split(key, 3)
+    w0 = _labels(ks[0], g)
+    r = _labels(ks[1], g)
+    bits = jax.random.bits(ks[2], (g,), dtype=jnp.uint32) & 1
+    ref = LR.select_labels(w0, r, bits)
+    pal = select_labels_pallas(w0, r, bits, interpret=True)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(pal))

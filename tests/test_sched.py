@@ -1,0 +1,120 @@
+"""Scheduler + speculation + accelerator-model invariants."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.circuits import nonlinear as NL
+from repro.core.circuits.builder import CircuitBuilder
+from repro.sched import schedulers as SC
+from repro.sched.speculation import speculate
+from repro.accel.sim import AccelConfig, simulate_core
+
+
+@pytest.fixture(scope="module")
+def net():
+    return NL.softmax_circuit(4, k=20, frac=8, style="xfbq").build()
+
+
+def _rand_net(ops):
+    cb = CircuitBuilder()
+    ins = [cb.g_input() for _ in range(4)] + [cb.e_input() for _ in range(4)]
+    pool = list(ins)
+    for op, a, b in ops:
+        a %= len(pool)
+        b %= len(pool)
+        pool.append(
+            cb.AND(pool[a], pool[b]) if op == 0 else cb.XOR(pool[a], pool[b])
+        )
+    cb.output(pool[-4:])
+    return cb.build()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    ops=st.lists(
+        st.tuples(st.integers(0, 1), st.integers(0, 999), st.integers(0, 999)),
+        min_size=10, max_size=80,
+    )
+)
+def test_all_orders_topological(ops):
+    net = _rand_net(ops)
+    for fn in (
+        SC.depth_first_order,
+        SC.full_reorder,
+        lambda n: SC.segment_reorder(n, 16),
+        lambda n: SC.fine_grained_order(n, 16),
+    ):
+        order = fn(net)
+        assert len(order) == net.num_gates
+        assert len(set(order.tolist())) == net.num_gates
+        assert SC.check_topological(net, order)
+
+
+def test_speculation_no_spill_when_memory_big(net):
+    order = SC.fine_grained_order(net, 10**9)
+    prog = speculate(net, order, capacity_wires=net.num_wires + 10,
+                     policy="apint")
+    assert prog.stats.oorw_fetches == 0
+    assert prog.stats.dram_wire_writes == 0
+
+
+def test_speculation_lbuw_beats_haac(net):
+    cap = 1024
+    order = SC.segment_reorder(net, cap // 2)
+    apint = speculate(net, order, cap, policy="apint")
+    haac = speculate(net, order, cap, policy="haac")
+    assert apint.stats.oorw_fetches < haac.stats.oorw_fetches
+    assert apint.stats.dram_wire_bytes < haac.stats.dram_wire_bytes
+
+
+def test_fig10_progression(net):
+    """HAAC -> +coarse -> +fine -> +speculation strictly improves latency;
+    APINT end point cuts memory stalls by >80% (paper: 86.1-99.4%)."""
+    cap = 1024
+    sr = SC.segment_reorder(net, cap // 2)
+    fine = SC.fine_grained_order(net, cap // 2)
+    results = {}
+    for name, order, policy, coal in [
+        ("haac", sr, "haac", False),
+        ("coarse", sr, "haac", True),
+        ("fine", fine, "haac", True),
+        ("apint", fine, "apint", True),
+    ]:
+        prog = speculate(net, order, cap, policy=policy)
+        cfg = AccelConfig(coalesced=coal)
+        results[name] = simulate_core(net, prog, cfg, cfg.dram_burst_latency)
+    assert results["coarse"].cycles < results["haac"].cycles
+    assert results["apint"].cycles < results["coarse"].cycles
+    mem_red = 1 - results["apint"].memory_stall_cycles / max(
+        results["haac"].memory_stall_cycles, 1)
+    assert mem_red > 0.8, mem_red
+    assert results["apint"].oorw_count < results["haac"].oorw_count
+
+
+def test_coarse_partition():
+    nets = [object()] * 37
+    parts = SC.coarse_grained_partition(nets, 16)
+    assert sum(len(p) for p in parts) == 37
+    assert max(len(p) for p in parts) - min(len(p) for p in parts) <= 1
+
+
+def test_cpfe_prioritizes_critical_path():
+    # chain of ANDs (critical) + independent XORs: chain must rank first
+    cb = CircuitBuilder()
+    a = cb.g_input()
+    b = cb.e_input()
+    chain = a
+    for _ in range(5):
+        chain = cb.AND(chain, b)
+    xors = [cb.XOR(a, b)]
+    for _ in range(4):
+        xors.append(cb.XOR(xors[-1], b))
+    cb.output([chain, xors[-1]])
+    net = cb.build()
+    rank = SC._cpfe_priorities(net, np.arange(net.num_gates))
+    and_ranks = [rank[g] for g in range(net.num_gates)
+                 if net.op[g] == 1]
+    xor_ranks = [rank[g] for g in range(net.num_gates)
+                 if net.op[g] == 0]
+    assert max(and_ranks) < min(xor_ranks)

@@ -1,0 +1,84 @@
+"""End-to-end behaviour: private transformer inference parity (the paper's
+accuracy claim, Fig. 8a analog) and the serving path."""
+
+import numpy as np
+import pytest
+
+from repro.config import PrivacyConfig
+
+
+@pytest.mark.slow
+def test_private_inference_matches_float(rng):
+    from repro.core.engine import PrivateTransformer, random_weights
+
+    d, heads, d_ff, S = 16, 2, 32, 8
+    weights = random_weights(rng, d, d_ff, 1)
+    x = rng.normal(0, 1, (S, d))
+    pcfg = PrivacyConfig(he_poly_n=256, he_num_primes=3, he_t_bits=40,
+                         frac_bits=7)
+    eng = PrivateTransformer(pcfg, d, heads, d_ff, weights, seed=0)
+    got = eng.forward_private(x)
+    want = eng.forward_float(x)
+    # fixed-point + LUT approximation error through a full block
+    assert np.abs(got - want).max() < 0.25
+    assert np.abs(got - want).mean() < 0.05
+    st = eng.p.stats
+    assert st.gc_instances_ands > 0
+    assert st.channel_offline.total > st.channel_online.total  # DELPHI shape
+
+
+@pytest.mark.slow
+def test_apint_reduces_layernorm_gc_end_to_end(rng):
+    """Whole-block workload with vs without the LayerNorm offload."""
+    from repro.core.engine import PrivateTransformer, random_weights
+
+    d, heads, d_ff, S = 16, 2, 32, 8
+    weights = random_weights(rng, d, d_ff, 1)
+    x = rng.normal(0, 1, (S, d))
+    ands = {}
+    for off in (True, False):
+        pcfg = PrivacyConfig(he_poly_n=256, he_num_primes=3, he_t_bits=40,
+                             frac_bits=7, layernorm_offload=off)
+        eng = PrivateTransformer(pcfg, d, heads, d_ff, weights, seed=0)
+        eng.forward_private(x)
+        ands[off] = sum(
+            v["and"] * v["instances"]
+            for k, v in eng.p.stats.per_fn.items()
+            if "layernorm" in k
+        )
+    assert ands[True] < 0.7 * ands[False]
+
+
+def test_serve_decode_matches_prefill(rng):
+    """Greedy decode tokens from the cache path == argmax from the full
+    forward at each position."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.config import get_config, reduced_config
+    from repro.models.transformer import forward, init_params
+    from repro.serve import ServeEngine
+    from repro.serve.engine import Request
+    import dataclasses
+
+    cfg = dataclasses.replace(
+        reduced_config(get_config("llama3.2-1b"), attn_chunk=16),
+        dtype="float32",
+    )
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    prompt = rng.integers(0, cfg.vocab_size, 9).astype(np.int32)
+    eng = ServeEngine(cfg, params, capacity=32, batch=1)
+    out = eng.generate([Request(prompt=prompt, max_new_tokens=4)])[0]
+
+    # oracle: recompute each step with a full prefill over the grown prompt
+    toks = list(prompt)
+    want = []
+    for _ in range(4):
+        logits, _ = forward(
+            cfg, params, {"tokens": jnp.asarray(np.array(toks)[None])},
+            mode="prefill",
+        )
+        nxt = int(np.argmax(np.asarray(logits)[0, : cfg.vocab_size]))
+        want.append(nxt)
+        toks.append(nxt)
+    assert out.out_tokens == want
