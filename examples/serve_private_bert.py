@@ -1,22 +1,25 @@
 """End-to-end driver: serve a (reduced) BERT-style encoder privately with
-batched requests — the paper's deployment scenario.
+the compile → preprocess → run lifecycle — the paper's deployment scenario.
 
-The server owns the weights, each client owns its input embeddings. For
-every request batch the engine runs the full APINT pipeline: DELPHI linear
-layers (HE offline), Beaver attention products, garbled softmax/GeLU, the
-APINT LayerNorm offload — and reports per-request latency plus the
-offline/online communication ledger.
+The server owns the weights, each client owns its input embeddings. The
+engine compiles one ``PiTSession`` per sequence-length bucket, runs ALL
+offline work (garbling, HE mask products, Beaver triples) for a whole
+batch of future requests in one preprocessing pass, then serves every
+request online-only from the bundle pool. The offline/online latency and
+communication tables come straight from the session's phase ledgers — the
+phase boundary itself, not accumulated timer deltas.
 
     PYTHONPATH=src python examples/serve_private_bert.py [--requests 3]
 """
 
 import argparse
-import time
+from time import perf_counter
 
 import numpy as np
 
 from repro.config import PrivacyConfig
 from repro.core.engine import PrivateTransformer, random_weights
+from repro.serve import PrivateRequest, PrivateServeEngine
 
 
 def main():
@@ -35,29 +38,47 @@ def main():
         he_poly_n=256, he_num_primes=3, he_t_bits=40, frac_bits=7,
         layernorm_offload=not args.no_offload,
     )
-    server = PrivateTransformer(pcfg, args.d, 2, 2 * args.d, weights, seed=0)
+    model = PrivateTransformer(pcfg, args.d, 2, 2 * args.d, weights, seed=0)
+    engine = PrivateServeEngine(model, buckets=(args.seq,),
+                                pool_target=args.requests)
     print(f"server up: d={args.d} layers={args.layers} "
-          f"LN-offload={not args.no_offload} t={server.p.t} "
-          f"gc_word={server.p.k}b\n")
+          f"LN-offload={not args.no_offload} t={model.p.t} "
+          f"gc_word={model.p.k}b  bucket S={args.seq}\n")
 
-    for i in range(args.requests):
-        x = rng.normal(0, 1, (args.seq, args.d))  # client-private input
-        t0 = time.time()
-        y_priv = server.forward_private(x)
-        dt = time.time() - t0
-        y_ref = server.forward_float(x)
-        err = np.abs(y_priv - y_ref).max()
-        print(f"request {i}: {dt:6.1f}s  max|priv-float|={err:.4f}")
+    # ---- offline: one preprocessing batch for the whole request wave ----
+    t0 = perf_counter()
+    level = engine.preprocess(args.seq, args.requests)
+    t_pre = perf_counter() - t0
+    print(f"preprocess: {args.requests} bundles in {t_pre:6.1f}s "
+          f"(pool level {level})")
 
-    st = server.p.stats
-    print("\n--- ledger ---")
-    print(f"offline: {st.channel_offline.total / 1e6:8.2f} MB "
-          f"(LAN model: {st.channel_offline.time_s():.2f}s)")
-    print(f"online : {st.channel_online.total / 1e6:8.2f} MB "
-          f"(LAN model: {st.channel_online.time_s():.2f}s)")
+    # ---- online: every request served from the same preprocessing batch -
+    requests = [
+        PrivateRequest(x=rng.normal(0, 1, (args.seq, args.d)))
+        for _ in range(args.requests)
+    ]
+    for i, r in enumerate(requests):
+        t0 = perf_counter()
+        engine.serve([r])
+        dt = perf_counter() - t0
+        err = np.abs(r.result - model.forward_float(r.x)).max()
+        print(f"request {i}: online {dt:6.1f}s  max|priv-float|={err:.4f}")
+
+    st = engine.stats(args.seq)
+    print("\n--- phase ledger (from the session phase boundary) ---")
+    print(f"offline: {st.offline.channel.total / 1e6:8.2f} MB "
+          f"in {st.offline.t_s:6.1f}s "
+          f"(LAN model: {st.offline.channel.time_s():.2f}s)")
+    print(f"online : {st.online.channel.total / 1e6:8.2f} MB "
+          f"in {st.online.t_s:6.1f}s "
+          f"(LAN model: {st.online.channel.time_s():.2f}s)")
     print(f"GC work: {st.gc_instances_ands:.3e} AND evaluations")
     for name, v in st.per_fn.items():
         print(f"  {name:26s} and/inst={v['and']:>7d} instances={v['instances']}")
+    cores = engine.schedule_info(args.seq)
+    busy = sum(1 for c in cores if c)
+    print(f"\ncoarse schedule: {sum(len(c) for c in cores)} GC unit ops "
+          f"over {busy}/{len(cores)} cores")
 
 
 if __name__ == "__main__":

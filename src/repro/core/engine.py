@@ -75,25 +75,31 @@ class PrivateTransformer:
         self.scale_q = 1.0 / math.sqrt(self.hd)
 
     # ------------------------------------------------------------------
-    def _trunc(self, xc, xs, in_scale: int):
-        """Exact GC truncation back to scale frac."""
-        def body(cb, ins):
-            return [ins[0]]
+    def compile_session(self, seq_len: int, *, seed: int = 0,
+                        impl: Optional[str] = None):
+        """Offline/online serving API: trace this model into a
+        ``PiTSession`` (see ``repro.core.session``) for one request bucket.
 
-        net = self.p.build_fn_circuit(
-            f"trunc_s{in_scale}", 1, 1, body, descale=in_scale - self.p.frac
-        )
-        oc, os_ = self.p.gc_apply(net, xc.reshape(-1, 1), xs.reshape(-1, 1), 1)
-        return oc.reshape(xc.shape), os_.reshape(xs.shape)
+        ``session.preprocess(n)`` then runs all garbling/HE/triple work up
+        front; each ``session.run(x, bundle)`` is online-phase only.
+        """
+        from repro.core import session as PS
+
+        return PS.compile(self, shape=(seq_len, self.d), seed=seed, impl=impl)
 
     def _linear_t(self, W, xc, xs):
         """(S, d_in) shares × W (d_out, d_in) -> shares at frac (trunc'd)."""
         yc, ys = self.p.linear(W, xc, xs)
-        return self._trunc(yc, ys, 2 * self.p.frac)
+        return self.p.trunc(yc, ys, 2 * self.p.frac)
 
     # ------------------------------------------------------------------
     def forward_private(self, x: np.ndarray) -> np.ndarray:
-        """x: (S, d) client input (float). Returns (S, d) revealed output."""
+        """x: (S, d) client input (float). Returns (S, d) revealed output.
+
+        Eager compatibility path: offline and online legs interleave per
+        layer. Production serving should go through ``compile_session`` →
+        ``preprocess`` → ``run`` so offline work pools across requests.
+        """
         p = self.p
         f = p.frac
         S = x.shape[0]
@@ -113,7 +119,7 @@ class PrivateTransformer:
                 )  # (S, S) at 2f
                 pc_, ps_ = p.softmax_rows(sc_, ss_, S, in_scale=2 * f)
                 oc_, os_ = p.matmul_private(pc_, ps_, vc[:, sl], vs[:, sl])
-                oc_, os_ = self._trunc(oc_, os_, 2 * f)
+                oc_, os_ = p.trunc(oc_, os_, 2 * f)
                 ctx_c[:, sl] = oc_
                 ctx_s[:, sl] = os_
             ac, as_ = self._linear_t(W.wo, ctx_c, ctx_s)

@@ -143,6 +143,22 @@ def garble(
     )
 
 
+def slice_instances(gc: GarbledCircuit, lo: int, hi: int) -> GarbledCircuit:
+    """A view of instances [lo, hi) of a batch-garbled circuit.
+
+    Sessions garble once per cached netlist for a whole preprocessing
+    batch, then hand each op/request its instance band.
+    """
+    return GarbledCircuit(
+        net=gc.net,
+        r=gc.r[lo:hi],
+        input_zero={w: z[lo:hi] for w, z in gc.input_zero.items()},
+        tables=gc.tables[lo:hi],
+        output_perm=gc.output_perm[lo:hi],
+        wire_zero=None if gc.wire_zero is None else gc.wire_zero[lo:hi],
+    )
+
+
 def encode_inputs(gc: GarbledCircuit, wire_ids: Sequence[int], bits) -> jnp.ndarray:
     """Active labels for given wires/bits. bits: (I, n) in {0,1}.
 

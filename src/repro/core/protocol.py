@@ -11,16 +11,27 @@ Layer menu:
   linear_*      — DELPHI split: offline HE Linear(R1), online standard matmul
   beaver_matmul — private×private products (attention scores, PV)
   gc_apply      — garbled nonlinear function with share reconstruct/remask
+  trunc         — exact deferred rescale through a tiny identity circuit
   layernorm     — full-GC baseline  OR  APINT offload (Fig. 4 ⑦–⑬):
                   mean/center on shares, variance via the HE inner-product
                   identity, β/γ affine via HE slots, only rsqrt·mul in GC.
+
+Every layer is split into an explicit ``*_offline(...) -> correlation`` /
+``*_online(x, correlation)`` pair. Offline methods depend only on shapes
+and server weights (they garble circuits, precompute the HE masked
+products and deal Beaver triples); online methods consume one correlation
+and the live input shares. The single-call composites (``linear``,
+``matmul_private``, ``gc_apply``, ``softmax_rows``, ``activation``,
+``trunc``, ``layernorm``) are thin compatibility wrappers over the pairs.
+``core/session.py`` builds the request-pooled preprocessing API on top.
 """
 
 from __future__ import annotations
 
 import math
-import time
+from contextlib import contextmanager
 from dataclasses import dataclass, field
+from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -43,24 +54,93 @@ from repro.core.ot import Channel, ot_labels, OT_BYTES_PER_TRANSFER
 
 
 @dataclass
+class PhaseStats:
+    """One protocol phase: its channel ledger and wall time."""
+
+    channel: Channel = field(default_factory=Channel)
+    t_s: float = 0.0
+
+    def comm_snapshot(self) -> Dict[str, object]:
+        return {
+            "total": self.channel.total,
+            "c2s": self.channel.client_to_server,
+            "s2c": self.channel.server_to_client,
+            "by_tag": dict(self.channel.by_tag),
+        }
+
+
 class Stats:
-    channel_offline: Channel = field(default_factory=Channel)
-    channel_online: Channel = field(default_factory=Channel)
-    gc_and_gates: int = 0
-    gc_gates: int = 0
-    gc_instances_gates: int = 0  # gates × instances actually executed
-    gc_instances_ands: int = 0
-    he_pt_muls: int = 0
-    he_encrypts: int = 0
-    he_decrypts: int = 0
-    t_offline_s: float = 0.0
-    t_online_s: float = 0.0
-    per_fn: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    """Phase-scoped protocol accounting.
+
+    All traffic and wall time is attributed to an explicit phase
+    (``offline`` or ``online``) through the :meth:`phase` context manager
+    rather than ad-hoc field mutation; ``channel_offline`` /
+    ``t_offline_s`` etc. remain as read-only compatibility views. Timing
+    uses ``perf_counter`` (monotonic) and is re-entrant: nested ``phase``
+    blocks of the same name accumulate wall time exactly once.
+    """
+
+    def __init__(self):
+        self.offline = PhaseStats()
+        self.online = PhaseStats()
+        self.gc_and_gates = 0
+        self.gc_gates = 0
+        self.gc_instances_gates = 0  # gates × instances actually executed
+        self.gc_instances_ands = 0
+        self.he_pt_muls = 0
+        self.he_encrypts = 0
+        self.he_decrypts = 0
+        self.per_fn: Dict[str, Dict[str, int]] = {}
+        self._depth: Dict[str, int] = {"offline": 0, "online": 0}
+
+    # -- compatibility views -------------------------------------------
+    @property
+    def channel_offline(self) -> Channel:
+        return self.offline.channel
+
+    @property
+    def channel_online(self) -> Channel:
+        return self.online.channel
+
+    @property
+    def t_offline_s(self) -> float:
+        return self.offline.t_s
+
+    @property
+    def t_online_s(self) -> float:
+        return self.online.t_s
 
     def fn(self, name: str) -> Dict[str, int]:
         return self.per_fn.setdefault(
             name, {"and": 0, "gates": 0, "instances": 0, "table_bytes": 0}
         )
+
+    def _phase(self, name: str) -> PhaseStats:
+        if name == "offline":
+            return self.offline
+        if name == "online":
+            return self.online
+        raise ValueError(f"unknown phase {name!r}")
+
+    @contextmanager
+    def phase(self, name: str):
+        """Time a block into the named phase (outermost block wins)."""
+        ph = self._phase(name)
+        self._depth[name] += 1
+        t0 = perf_counter() if self._depth[name] == 1 else None
+        try:
+            yield ph
+        finally:
+            self._depth[name] -= 1
+            if t0 is not None:
+                ph.t_s += perf_counter() - t0
+
+    def comm_snapshot(self) -> Dict[str, Dict[str, object]]:
+        """Copy of both phase ledgers (for before/after diffing in tests)."""
+        return {
+            "offline": self.offline.comm_snapshot(),
+            "online": self.online.comm_snapshot(),
+        }
 
 
 def _bits_of(vals: np.ndarray, k: int, t: int) -> np.ndarray:
@@ -76,6 +156,54 @@ def _words_from_bits(bits: np.ndarray, k: int, t: int) -> np.ndarray:
     shifts = np.arange(k, dtype=np.uint64)
     vals = np.sum(b << shifts, axis=-1, dtype=np.uint64)
     return np.mod(vals, np.uint64(t))
+
+
+# ---------------------------------------------------------------------------
+# offline correlations (the bundle parts consumed by the online phase)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LinearCorrelation:
+    """DELPHI linear-layer preprocessing: Enc(R1) round already metered."""
+
+    Wmod: np.ndarray
+    r1: np.ndarray
+    s_mask: np.ndarray
+    client_y: np.ndarray  # W·R1 − s_mask (client's offline output share)
+    bias_q: Optional[np.ndarray] = None
+
+
+@dataclass
+class BeaverCorrelation:
+    trip: SS.BeaverTriple
+
+
+@dataclass
+class GCCorrelation:
+    """A garbled netlist batch plus fresh output masks for one use."""
+
+    net: Netlist
+    gcirc: G.GarbledCircuit
+    masks: np.ndarray  # (I, n_out) — the client's output shares r
+    mask_enc: np.ndarray  # t − r, wired as garbler inputs
+    n_out: int
+
+    @property
+    def instances(self) -> int:
+        return self.masks.shape[0]
+
+
+@dataclass
+class LayerNormCorrelation:
+    offload: bool
+    gc: GCCorrelation
+    bq: np.ndarray
+    gq: Optional[np.ndarray] = None  # offload: γ at scale f
+    raw_e: Optional[np.ndarray] = None  # full-GC: (I, 2n) γ/β words
+    he_mask: Optional[np.ndarray] = None  # offload: inner-product mask
+    inv_n: int = 0
+    in_scale: int = 0
 
 
 class PiTProtocol:
@@ -105,6 +233,11 @@ class PiTProtocol:
     def style(self) -> str:
         return self.pcfg.mult_style
 
+    @property
+    def _ct_bytes(self) -> int:
+        """Wire size of one BFV ciphertext (2 polys, RNS limbs, 8B words)."""
+        return 2 * len(self.params.qs) * self.params.n * 8
+
     # ------------------------------------------------------------------
     # shares
     # ------------------------------------------------------------------
@@ -123,71 +256,103 @@ class PiTProtocol:
     # ------------------------------------------------------------------
     # DELPHI linear layer (server weights)
     # ------------------------------------------------------------------
+    def quantize_weight(self, W: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """(Wq signed fixed-point, Wmod residues) — bundle-invariant, so
+        sessions compute it once and share it across correlations."""
+        Wq = np.round(np.asarray(W, np.float64) * (1 << self.frac)).astype(np.int64)
+        return Wq, np.mod(Wq, self.t).astype(np.uint64)
+
+    def linear_offline(self, W: Optional[np.ndarray], x_shape: Tuple[int, ...],
+                       bias: Optional[np.ndarray] = None,
+                       use_he_offline: bool = False,
+                       quantized: Optional[Tuple[np.ndarray, np.ndarray]] = None
+                       ) -> LinearCorrelation:
+        """Offline half of ``y = W x + b``: client sends Enc(R1); server
+        computes Enc(W·R1 − s_mask) (he_matvec for small dims or
+        metered-equivalent modular math); client decrypts its share.
+        Depends only on the input *shape*, never the input. ``quantized``
+        is a cached :meth:`quantize_weight` result; when given, ``W`` may
+        be None."""
+        Wq, Wmod = quantized if quantized is not None else self.quantize_weight(W)
+        d_out, d_in = Wq.shape
+        with self.stats.phase("offline"):
+            r1 = self.rng.integers(0, self.t, x_shape, dtype=np.uint64)
+            ct_count = math.ceil(r1.size / self.params.n)
+            ch = self.stats.channel_offline
+            ch.c2s(ct_count * self._ct_bytes, "he-enc-r")
+            if use_he_offline and r1.ndim == 1:
+                ct_r = HE.encrypt(self.params, self.pk,
+                                  HE.encode_coeffs(self.params, r1), self._next_key())
+                outs = HE.he_matvec(self.params, ct_r, Wq)
+                self.stats.he_pt_muls += len(outs)
+                self.stats.he_encrypts += 1
+                polys = [HE.decrypt(self.params, self.sk, c) for c in outs]
+                self.stats.he_decrypts += len(outs)
+                wr = HE.he_matvec_extract(self.params, polys, d_in, d_out)
+                per_ct, blocks = HE.matvec_plan(self.params, d_in, d_out)
+                ch.s2c(blocks * self._ct_bytes, "he-wr")
+            else:
+                # metered-equivalent path (big matrices): same math mod t
+                wr = (SS.matmul_mod(Wmod, r1.reshape(-1, 1), self.t).reshape(-1)
+                      if r1.ndim == 1 else SS.matmul_mod(r1, Wmod.T, self.t))
+                blocks = math.ceil(wr.size / self.params.n)
+                self.stats.he_pt_muls += blocks
+                ch.s2c(blocks * self._ct_bytes, "he-wr")
+            s_mask = self.rng.integers(0, self.t, wr.shape, dtype=np.uint64)
+            client_y = SS.sub_mod(wr, s_mask, self.t)  # client's offline share
+            bias_q = None
+            if bias is not None:
+                bias_q = SS.encode_fx(bias, 2 * self.frac, self.t)
+        return LinearCorrelation(Wmod=Wmod, r1=r1, s_mask=s_mask,
+                                 client_y=client_y, bias_q=bias_q)
+
+    def linear_online(self, corr: LinearCorrelation, x_c, x_s
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        """Online half: server computes W(x − R1) + s_mask (+ b)."""
+        with self.stats.phase("online"):
+            x_open = SS.sub_mod(SS.add_mod(x_c, x_s, self.t), corr.r1, self.t)
+            # (client sends x_c − r1; server adds its share → x − r1 opened)
+            self.stats.channel_online.c2s(x_open.size * 8, "x-minus-r")
+            wx = (SS.matmul_mod(corr.Wmod, x_open.reshape(-1, 1), self.t).reshape(-1)
+                  if x_open.ndim == 1
+                  else SS.matmul_mod(x_open, corr.Wmod.T, self.t))
+            server_y = SS.add_mod(wx, corr.s_mask, self.t)
+            if corr.bias_q is not None:
+                server_y = SS.add_mod(
+                    server_y, np.broadcast_to(corr.bias_q, server_y.shape), self.t
+                )
+        return corr.client_y, server_y  # scale 2·frac
+
     def linear(self, W: np.ndarray, x_c, x_s, bias: Optional[np.ndarray] = None,
                use_he_offline: bool = False):
-        """y = W x + b at scale 2·frac. Shares in (c, s); W float.
-
-        Offline: client sends Enc(R1); server computes Enc(W·R1 − s_mask)
-        (he_matvec for small dims or metered-equivalent modular math),
-        client decrypts its share. Online: server computes W(x − R1) + s.
-        """
-        Wq = np.round(np.asarray(W, np.float64) * (1 << self.frac)).astype(np.int64)
-        d_out, d_in = Wq.shape
-        # offline ------------------------------------------------------
-        t0 = time.time()
-        r1 = self.rng.integers(0, self.t, x_c.shape, dtype=np.uint64)
-        ct_count = math.ceil(x_c.size / self.params.n)
-        ch = self.stats.channel_offline
-        ch.c2s(ct_count * 2 * len(self.params.qs) * self.params.n * 8, "he-enc-r")
-        Wmod = np.mod(Wq, self.t).astype(np.uint64)
-        if use_he_offline and x_c.ndim == 1:
-            ct_r = HE.encrypt(self.params, self.pk,
-                              HE.encode_coeffs(self.params, r1), self._next_key())
-            outs = HE.he_matvec(self.params, ct_r, Wq)
-            self.stats.he_pt_muls += len(outs)
-            self.stats.he_encrypts += 1
-            polys = [HE.decrypt(self.params, self.sk, c) for c in outs]
-            self.stats.he_decrypts += len(outs)
-            wr = HE.he_matvec_extract(self.params, polys, d_in, d_out)
-            per_ct, blocks = HE.matvec_plan(self.params, d_in, d_out)
-            ch.s2c(blocks * 2 * len(self.params.qs) * self.params.n * 8, "he-wr")
-        else:
-            # metered-equivalent path (big matrices): same math mod t
-            wr = (SS.matmul_mod(Wmod, r1.reshape(-1, 1), self.t).reshape(-1)
-                  if r1.ndim == 1 else SS.matmul_mod(r1, Wmod.T, self.t))
-            blocks = math.ceil(wr.size / self.params.n)
-            self.stats.he_pt_muls += blocks
-            ch.s2c(blocks * 2 * len(self.params.qs) * self.params.n * 8, "he-wr")
-        s_mask = self.rng.integers(0, self.t, wr.shape, dtype=np.uint64)
-        client_y = SS.sub_mod(wr, s_mask, self.t)  # client's offline share
-        self.stats.t_offline_s += time.time() - t0
-        # online -------------------------------------------------------
-        t0 = time.time()
-        x_open = SS.sub_mod(SS.add_mod(x_c, x_s, self.t), r1, self.t)
-        # (client sends x_c − r1; server adds its share → x − r1 opened to server)
-        self.stats.channel_online.c2s(x_open.size * 8, "x-minus-r")
-        wx = (SS.matmul_mod(Wmod, x_open.reshape(-1, 1), self.t).reshape(-1)
-              if x_open.ndim == 1 else SS.matmul_mod(x_open, Wmod.T, self.t))
-        server_y = SS.add_mod(wx, s_mask, self.t)
-        if bias is not None:
-            bq = SS.encode_fx(bias, 2 * self.frac, self.t)
-            server_y = SS.add_mod(server_y, np.broadcast_to(bq, server_y.shape), self.t)
-        self.stats.t_online_s += time.time() - t0
-        return client_y, server_y  # scale 2·frac
+        """y = W x + b at scale 2·frac (compat wrapper: offline + online)."""
+        corr = self.linear_offline(W, x_c.shape, bias=bias,
+                                   use_he_offline=use_he_offline)
+        return self.linear_online(corr, x_c, x_s)
 
     # ------------------------------------------------------------------
     # Beaver matmul (private × private)
     # ------------------------------------------------------------------
+    def beaver_offline(self, m: int, k: int, n: int) -> BeaverCorrelation:
+        """Deal one (m,k)×(k,n) matmul triple (HE-based in production)."""
+        with self.stats.phase("offline"):
+            trip = SS.deal_matmul_triple(self.rng, m, k, n, self.t)
+            self.stats.channel_offline.s2c((m * k + k * n + m * n) * 8, "beaver")
+        return BeaverCorrelation(trip)
+
+    def beaver_online(self, corr: BeaverCorrelation, xc, xs, yc, ys
+                      ) -> Tuple[np.ndarray, np.ndarray]:
+        with self.stats.phase("online"):
+            z1, z2, opened = SS.beaver_matmul(xc, xs, yc, ys, corr.trip, self.t)
+            self.stats.channel_online.c2s(opened // 2, "beaver-open")
+            self.stats.channel_online.s2c(opened // 2, "beaver-open")
+        return z1, z2  # scale doubles
+
     def matmul_private(self, xc, xs, yc, ys):
         m, k = xc.shape
         k2, n = yc.shape
-        trip = SS.deal_matmul_triple(self.rng, m, k, n, self.t)
-        # triple generation is offline traffic (HE-based in production)
-        self.stats.channel_offline.s2c((m * k + k * n + m * n) * 8, "beaver")
-        z1, z2, opened = SS.beaver_matmul(xc, xs, yc, ys, trip, self.t)
-        self.stats.channel_online.c2s(opened // 2, "beaver-open")
-        self.stats.channel_online.s2c(opened // 2, "beaver-open")
-        return z1, z2  # scale doubles
+        corr = self.beaver_offline(m, k, n)
+        return self.beaver_online(corr, xc, xs, yc, ys)
 
     # ------------------------------------------------------------------
     # garbled nonlinear function
@@ -213,6 +378,77 @@ class PiTProtocol:
         self._netlist_cache[name] = net
         return net
 
+    def gc_offline(self, net: Netlist, instances: int, n_out: int,
+                   gcirc: Optional[G.GarbledCircuit] = None) -> GCCorrelation:
+        """Garble + draw output masks + meter tables/label transfer.
+
+        ``gcirc`` lets a session pass a slice of a batch-garbled circuit
+        (one garbling call per cached netlist across the whole bundle
+        batch); when omitted the netlist is garbled here.
+        """
+        I = instances
+        st = self.stats
+        with st.phase("offline"):
+            if gcirc is None:
+                gcirc = G.garble(net, self._next_key(), I, impl=self.impl)
+            assert gcirc.num_instances == I
+            masks = self.rng.integers(0, self.t, (I, n_out), dtype=np.uint64)
+            mask_enc = SS.sub_mod(np.zeros_like(masks), masks, self.t)  # t − r
+            st.channel_offline.c2s(int(gcirc.tables.size) * 4, f"tables:{net.name}")
+            # only the output-mask labels are offline-known garbler input;
+            # labels for the live share xc can only flow online (gc_online)
+            st.channel_offline.c2s(I * n_out * self.k * 16, "g-labels")
+            st.gc_and_gates += net.and_count
+            st.gc_gates += net.num_gates
+            st.gc_instances_ands += net.and_count * I
+            st.gc_instances_gates += net.num_gates * I
+            f = st.fn(net.name)
+            f["and"] = net.and_count
+            f["gates"] = net.num_gates
+            f["instances"] += I
+            f["table_bytes"] += int(gcirc.tables.size) * 4
+        return GCCorrelation(net=net, gcirc=gcirc, masks=masks,
+                             mask_enc=mask_enc, n_out=n_out)
+
+    def gc_online(self, corr: GCCorrelation, xc: np.ndarray, xs: np.ndarray,
+                  raw_e: Optional[np.ndarray] = None
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+        """OT server labels, evaluate, decode. Returns (client, server) shares."""
+        net, gcirc = corr.net, corr.gcirc
+        k = self.k
+        st = self.stats
+        with st.phase("online"):
+            g_bits = np.concatenate(
+                [_bits_of(xc, k, self.t), _bits_of(corr.mask_enc, k, self.t)],
+                axis=1,
+            )
+            assert g_bits.shape[1] == len(net.garbler_inputs)
+            g_lab = G.encode_inputs(gcirc, net.garbler_inputs, g_bits)
+            # labels for the client's live input share (the mask-label half
+            # was already transferred with the tables during preprocessing)
+            xc_bits = len(net.garbler_inputs) - corr.n_out * k
+            st.channel_online.c2s(xc.shape[0] * xc_bits * 16, "g-labels")
+            e_bits = _bits_of(xs, k, self.t)
+            if raw_e is not None:
+                rv = np.mod(np.asarray(raw_e, np.int64), 1 << k).astype(np.uint64)
+                e_bits = np.concatenate(
+                    [e_bits, _bits_of(rv, k, 1 << k)], axis=1
+                )
+            e_zero = jnp.stack(
+                [gcirc.input_zero[int(w)] for w in net.evaluator_inputs], axis=1
+            )
+            e_lab = ot_labels(st.channel_online, e_zero, gcirc.r[:, None, :],
+                              e_bits, tag=f"ot:{net.name}")
+            active = {int(w): g_lab[:, j] for j, w in enumerate(net.garbler_inputs)}
+            active.update(
+                {int(w): e_lab[:, j] for j, w in enumerate(net.evaluator_inputs)}
+            )
+            active.update(G.const_labels(gcirc))
+            out_lab = G.evaluate(net, gcirc.tables, active, impl=self.impl)
+            out_bits = G.decode_outputs(gcirc, out_lab)
+            server_share = _words_from_bits(out_bits, k, self.t)
+        return corr.masks, server_share  # client share = r (masks)
+
     def gc_apply(self, net: Netlist, xc: np.ndarray, xs: np.ndarray,
                  n_out: int, raw_e: Optional[np.ndarray] = None
                  ) -> Tuple[np.ndarray, np.ndarray]:
@@ -222,83 +458,175 @@ class PiTProtocol:
         batched — the paper's coarse-grained row mapping. ``raw_e``:
         (I, n_raw) signed int64 server-private values (two's complement).
         """
-        I, n_in = xc.shape
-        k = self.k
-        st = self.stats
-        # ---- offline: garble + send tables + client-input labels -------
-        t0 = time.time()
-        gcirc = G.garble(net, self._next_key(), I, impl=self.impl)
-        masks = self.rng.integers(0, self.t, (I, n_out), dtype=np.uint64)
-        mask_enc = SS.sub_mod(np.zeros_like(masks), masks, self.t)  # t − r
-        g_bits = np.concatenate(
-            [_bits_of(xc, k, self.t), _bits_of(mask_enc, k, self.t)], axis=1
-        )
-        st.channel_offline.c2s(int(gcirc.tables.size) * 4, f"tables:{net.name}")
-        st.channel_offline.c2s(I * len(net.garbler_inputs) * 16, "g-labels")
-        st.gc_and_gates += net.and_count
-        st.gc_gates += net.num_gates
-        st.gc_instances_ands += net.and_count * I
-        st.gc_instances_gates += net.num_gates * I
-        f = st.fn(net.name)
-        f["and"] = net.and_count
-        f["gates"] = net.num_gates
-        f["instances"] += I
-        f["table_bytes"] += int(gcirc.tables.size) * 4
-        st.t_offline_s += time.time() - t0
-        # ---- online: OT server labels, evaluate, decode ----------------
-        t0 = time.time()
-        assert g_bits.shape[1] == len(net.garbler_inputs)
-        g_lab = G.encode_inputs(gcirc, net.garbler_inputs, g_bits)
-        e_bits = _bits_of(xs, k, self.t)
-        if raw_e is not None:
-            rv = np.mod(np.asarray(raw_e, np.int64), 1 << k).astype(np.uint64)
-            e_bits = np.concatenate(
-                [e_bits, _bits_of(rv, k, 1 << k)], axis=1
-            )
-        e_zero = jnp.stack(
-            [gcirc.input_zero[int(w)] for w in net.evaluator_inputs], axis=1
-        )
-        e_lab = ot_labels(st.channel_online, e_zero, gcirc.r[:, None, :],
-                          e_bits, tag=f"ot:{net.name}")
-        active = {int(w): g_lab[:, j] for j, w in enumerate(net.garbler_inputs)}
-        active.update(
-            {int(w): e_lab[:, j] for j, w in enumerate(net.evaluator_inputs)}
-        )
-        active.update(G.const_labels(gcirc))
-        out_lab = G.evaluate(net, gcirc.tables, active, impl=self.impl)
-        out_bits = G.decode_outputs(gcirc, out_lab)
-        server_share = _words_from_bits(out_bits, k, self.t)
-        st.t_online_s += time.time() - t0
-        return masks, server_share  # client share = r (masks)
+        corr = self.gc_offline(net, xc.shape[0], n_out)
+        return self.gc_online(corr, xc, xs, raw_e=raw_e)
 
     # ------------------------------------------------------------------
-    # composite layers
+    # cached netlist builders (shared by wrappers and sessions)
     # ------------------------------------------------------------------
-    def softmax_rows(self, sc, ss, row_len: int, in_scale: int):
-        """(I, n) shares at scale `in_scale` -> softmax shares at frac."""
+    def softmax_net(self, row_len: int, in_scale: int) -> Netlist:
         def body(cb, ins):
             return _softmax_body(cb, ins, self.frac, self.style)
 
-        net = self.build_fn_circuit(
+        return self.build_fn_circuit(
             f"softmax{row_len}", row_len, row_len, body,
             descale=in_scale - self.frac,
         )
-        return self.gc_apply(net, sc, ss, row_len)
 
-    def activation(self, kind: str, xc, xs, in_scale: int):
-        """Elementwise GeLU/SiLU on shares of any shape (batched rows)."""
+    def activation_net(self, kind: str, in_scale: int) -> Netlist:
         def body(cb, ins):
             if kind == "gelu":
                 return [_gelu_body(cb, ins[0], self.frac, self.style)]
             return [_silu_body(cb, ins[0], self.frac, self.style)]
 
-        net = self.build_fn_circuit(
+        return self.build_fn_circuit(
             f"{kind}", 1, 1, body, descale=in_scale - self.frac
         )
-        flat_c = xc.reshape(-1, 1)
-        flat_s = xs.reshape(-1, 1)
-        oc, os_ = self.gc_apply(net, flat_c, flat_s, 1)
+
+    def trunc_net(self, in_scale: int) -> Netlist:
+        def body(cb, ins):
+            return [ins[0]]
+
+        return self.build_fn_circuit(
+            f"trunc_s{in_scale}", 1, 1, body, descale=in_scale - self.frac
+        )
+
+    def layernorm_full_net(self, n: int, in_scale: int) -> Netlist:
+        def body(cb, ins, raws):
+            return _layernorm_body(cb, ins, self.frac, self.style,
+                                   raws[:n], raws[n:])
+
+        return self.build_fn_circuit(
+            f"layernorm_full{n}", n, n, body,
+            descale=in_scale - self.frac, n_raw_e=2 * n,
+        )
+
+    def layernorm_reduced_net(self, n: int, in_scale: int) -> Netlist:
+        f = self.frac
+        sc_ = in_scale + f
+        return self.build_fn_circuit(
+            f"layernorm_reduced{n}_s{in_scale}", n + 1, n,
+            _make_ln_reduced(f, self.style, 2 * sc_, sc_), descale=0,
+        )
+
+    # ------------------------------------------------------------------
+    # composite layers: offline/online pairs + compat wrappers
+    # ------------------------------------------------------------------
+    def softmax_offline(self, row_len: int, in_scale: int, instances: int,
+                        gcirc: Optional[G.GarbledCircuit] = None
+                        ) -> GCCorrelation:
+        return self.gc_offline(self.softmax_net(row_len, in_scale),
+                               instances, row_len, gcirc)
+
+    def softmax_rows(self, sc, ss, row_len: int, in_scale: int):
+        """(I, n) shares at scale `in_scale` -> softmax shares at frac."""
+        corr = self.softmax_offline(row_len, in_scale, sc.shape[0])
+        return self.gc_online(corr, sc, ss)
+
+    def activation_offline(self, kind: str, in_scale: int, n_elems: int,
+                           gcirc: Optional[G.GarbledCircuit] = None
+                           ) -> GCCorrelation:
+        return self.gc_offline(self.activation_net(kind, in_scale),
+                               n_elems, 1, gcirc)
+
+    def activation_online(self, corr: GCCorrelation, xc, xs):
+        oc, os_ = self.gc_online(corr, xc.reshape(-1, 1), xs.reshape(-1, 1))
         return oc.reshape(xc.shape), os_.reshape(xs.shape)
+
+    def activation(self, kind: str, xc, xs, in_scale: int):
+        """Elementwise GeLU/SiLU on shares of any shape (batched rows)."""
+        corr = self.activation_offline(kind, in_scale, xc.size)
+        return self.activation_online(corr, xc, xs)
+
+    def trunc_offline(self, in_scale: int, n_elems: int,
+                      gcirc: Optional[G.GarbledCircuit] = None
+                      ) -> GCCorrelation:
+        return self.gc_offline(self.trunc_net(in_scale), n_elems, 1, gcirc)
+
+    def trunc_online(self, corr: GCCorrelation, xc, xs):
+        oc, os_ = self.gc_online(corr, xc.reshape(-1, 1), xs.reshape(-1, 1))
+        return oc.reshape(xc.shape), os_.reshape(xs.shape)
+
+    def trunc(self, xc, xs, in_scale: int):
+        """Exact GC truncation back to scale frac (elementwise)."""
+        corr = self.trunc_offline(in_scale, xc.size)
+        return self.trunc_online(corr, xc, xs)
+
+    def layernorm_offline(self, n: int, instances: int, in_scale: int,
+                          gamma, beta,
+                          gcirc: Optional[G.GarbledCircuit] = None
+                          ) -> LayerNormCorrelation:
+        """All input-independent LayerNorm work for a (instances, n) input."""
+        I = instances
+        f = self.frac
+        t = self.t
+        st = self.stats
+        if not self.pcfg.layernorm_offload:
+            net = self.layernorm_full_net(n, in_scale)
+            gcc = self.gc_offline(net, I, n, gcirc)
+            with st.phase("offline"):
+                gq = np.round(np.asarray(gamma, np.float64) * (1 << f)).astype(np.int64)
+                bq = np.round(np.asarray(beta, np.float64) * (1 << f)).astype(np.int64)
+                raw = np.concatenate([np.broadcast_to(gq, (I, n)),
+                                      np.broadcast_to(bq, (I, n))], axis=1)
+            return LayerNormCorrelation(offload=False, gc=gcc, bq=bq,
+                                        raw_e=raw, in_scale=in_scale)
+
+        # ---- APINT Fig. 4, offline legs -------------------------------
+        with st.phase("offline"):
+            inv_n = int(round((1 << f) / n))
+            gq = SS.encode_fx(np.asarray(gamma), f, t)
+            bq = SS.encode_fx(np.asarray(beta), f, t)
+            # ⑩ Enc(R2') for the γ⊙r' slot products is sent ahead of time
+            ct_blocks = math.ceil(I * n / self.params.n)
+            st.channel_offline.c2s(ct_blocks * self._ct_bytes, "he-ln-r")
+            st.he_pt_muls += ct_blocks
+            # ⑧ Enc of the client's centered share for the inner product
+            st.channel_offline.c2s(I * self._ct_bytes, "he-enc-centered")
+            st.he_encrypts += I
+            he_mask = self.rng.integers(0, t, I, dtype=np.uint64)
+        gcc = self.gc_offline(self.layernorm_reduced_net(n, in_scale), I, n, gcirc)
+        return LayerNormCorrelation(offload=True, gc=gcc, gq=gq, bq=bq,
+                                    he_mask=he_mask, inv_n=inv_n,
+                                    in_scale=in_scale)
+
+    def layernorm_online(self, corr: LayerNormCorrelation, xc, xs):
+        t = self.t
+        st = self.stats
+        if not corr.offload:
+            oc, os_ = self.gc_online(corr.gc, xc, xs, raw_e=corr.raw_e)
+            return oc, os_
+
+        # ---- APINT Fig. 4 ⑦–⑬, online legs ----------------------------
+        with st.phase("online"):
+            I, n = xc.shape
+            f = self.frac
+            in_scale = corr.in_scale
+            # ⑦ mean & center on shares (standard local ops): ×round(2^f/n)
+            mu_c = SS.scalar_mul_mod(corr.inv_n, _row_sum(xc, t), t)
+            mu_s = SS.scalar_mul_mod(corr.inv_n, _row_sum(xs, t), t)
+            # centered x' at scale Sc = in_scale + f
+            cxc = SS.sub_mod(SS.scalar_mul_mod(1 << f, xc, t), mu_c[:, None], t)
+            cxs = SS.sub_mod(SS.scalar_mul_mod(1 << f, xs, t), mu_s[:, None], t)
+            # ⑧⑨ variance via HE inner product: Σx'² = Σu² + 2⟨u, r'⟩ + Σr'²
+            cross_c, cross_s = self._he_inner_online(cxc, cxs, corr.he_mask)
+            var_c = SS.add_mod(_row_sum_sq(cxc, t),
+                               SS.scalar_mul_mod(2, cross_c, t), t)
+            var_s = SS.add_mod(_row_sum_sq(cxs, t),
+                               SS.scalar_mul_mod(2, cross_s, t), t)
+            var_c = SS.scalar_mul_mod(corr.inv_n, var_c, t)  # scale 2·Sc + f
+            var_s = SS.scalar_mul_mod(corr.inv_n, var_s, t)
+            # ⑩⑪ γ·x' via HE slots: γ⊙r' offline, γ⊙u server-local
+            gxc = _rowwise_mul(corr.gq, cxc, t)
+            gxs = _rowwise_mul(corr.gq, cxs, t)
+            in_c = np.concatenate([gxc, var_c[:, None]], axis=1)
+            in_s = np.concatenate([gxs, var_s[:, None]], axis=1)
+        # ⑫ reduced GC: rsqrt(var) × (γ·x')
+        oc, os_ = self.gc_online(corr.gc, in_c, in_s)
+        with st.phase("online"):
+            # ⑬ + β (server-held parameter added to its share)
+            os_ = SS.add_mod(os_, np.broadcast_to(corr.bq, os_.shape), t)
+        return oc, os_
 
     def layernorm(self, xc, xs, gamma, beta, in_scale: int):
         """(I, n) shares at scale `in_scale` -> LayerNorm shares at frac.
@@ -307,89 +635,27 @@ class PiTProtocol:
         (γ/β enter the circuit as raw evaluator words — they are the
         server's weights, so they cost full word×word multiplies).
         """
-        I, n = xc.shape
-        f = self.frac
-        if not self.pcfg.layernorm_offload:
-            def body(cb, ins, raws):
-                return _layernorm_body(cb, ins, f, self.style,
-                                       raws[:n], raws[n:])
+        corr = self.layernorm_offline(xc.shape[1], xc.shape[0], in_scale,
+                                      gamma, beta)
+        return self.layernorm_online(corr, xc, xs)
 
-            net = self.build_fn_circuit(
-                f"layernorm_full{n}", n, n, body,
-                descale=in_scale - f, n_raw_e=2 * n,
-            )
-            gq = np.round(np.asarray(gamma, np.float64) * (1 << f)).astype(np.int64)
-            bq = np.round(np.asarray(beta, np.float64) * (1 << f)).astype(np.int64)
-            raw = np.concatenate([np.broadcast_to(gq, (I, n)),
-                                  np.broadcast_to(bq, (I, n))], axis=1)
-            return self.gc_apply(net, xc, xs, n, raw_e=raw)
-
-        # ---- APINT Fig. 4 ⑦–⑬ -----------------------------------------
-        t = self.t
-        st = self.stats
-        # ⑦ mean & center on shares (standard local ops): ×round(2^f/n)
-        inv_n = int(round((1 << f) / n))
-        mu_c = SS.scalar_mul_mod(inv_n, _row_sum(xc, t), t)
-        mu_s = SS.scalar_mul_mod(inv_n, _row_sum(xs, t), t)
-        # centered x' at scale Sc = in_scale + f
-        cxc = SS.sub_mod(SS.scalar_mul_mod(1 << f, xc, t), mu_c[:, None], t)
-        cxs = SS.sub_mod(SS.scalar_mul_mod(1 << f, xs, t), mu_s[:, None], t)
-        sc_ = in_scale + f
-        # ⑧⑨ variance via HE inner product: Σx'² = Σu² + 2⟨u, r'⟩ + Σr'²
-        # (u = server's centered share, r' = client's centered share)
-        t0 = time.time()
-        cross_c, cross_s = self._he_inner(cxc, cxs)
-        st.t_online_s += time.time() - t0
-        var_c = SS.add_mod(_row_sum_sq(cxc, t),
-                           SS.scalar_mul_mod(2, cross_c, t), t)
-        var_s = SS.add_mod(_row_sum_sq(cxs, t),
-                           SS.scalar_mul_mod(2, cross_s, t), t)
-        var_c = SS.scalar_mul_mod(inv_n, var_c, t)  # scale 2·Sc + f
-        var_s = SS.scalar_mul_mod(inv_n, var_s, t)
-        var_descale = 2 * sc_  # (2·Sc + f) → f
-        # ⑩⑪ γ·x' via HE slots: γ⊙r' offline (Enc(R2') sent offline), γ⊙u
-        # server-local. Scale: Sc + f → descale Sc in GC.
-        gq = SS.encode_fx(np.asarray(gamma), f, t)
-        gxc = _rowwise_mul(gq, cxc, t)
-        gxs = _rowwise_mul(gq, cxs, t)
-        ct_blocks = math.ceil(cxc.size / self.params.n)
-        st.channel_offline.c2s(
-            ct_blocks * 2 * len(self.params.qs) * self.params.n * 8, "he-ln-r")
-        st.he_pt_muls += ct_blocks
-        # ⑫ reduced GC: rsqrt(var) × (γ·x')
-        net = self.build_fn_circuit(
-            f"layernorm_reduced{n}_s{in_scale}", n + 1, n,
-            _make_ln_reduced(f, self.style, var_descale, sc_), descale=0,
-        )
-        in_c = np.concatenate([gxc, var_c[:, None]], axis=1)
-        in_s = np.concatenate([gxs, var_s[:, None]], axis=1)
-        oc, os_ = self.gc_apply(net, in_c, in_s, n)
-        # ⑬ + β (server-held parameter added to its share)
-        bq = SS.encode_fx(np.asarray(beta), f, t)
-        os_ = SS.add_mod(os_, np.broadcast_to(bq, os_.shape), t)
-        return oc, os_
-
-    def _he_inner(self, cxc, cxs):
+    def _he_inner_online(self, cxc, cxs, mask: np.ndarray):
         """Shares of ⟨client_row, server_row⟩ per row (Fig. 4 ⑧).
 
-        Offline: client sends Enc(r'_row) coefficient-packed; online the
-        server mul_plains with its reversed share and masks.
+        The client's Enc(r'_row) was sent during preprocessing; online the
+        server mul_plains with its reversed share and returns the masked
+        cross term. ``mask`` is the offline-drawn server share.
         """
         I, n = cxc.shape
         st = self.stats
-        ch_off, ch_on = st.channel_offline, st.channel_online
-        ct_bytes = 2 * len(self.params.qs) * self.params.n * 8
-        ch_off.c2s(I * ct_bytes, "he-enc-centered")
-        st.he_encrypts += I
         # metered-equivalent modular math (exact same result as the HE path,
         # which tests exercise at small sizes through he.he_matvec):
         cross = np.array(
             [int(np.dot(cxc[i].astype(object), cxs[i].astype(object)) % self.t)
              for i in range(I)], dtype=np.uint64)
         st.he_pt_muls += I
-        ch_on.s2c(I * ct_bytes, "he-cross")
+        st.channel_online.s2c(I * self._ct_bytes, "he-cross")
         st.he_decrypts += I
-        mask = self.rng.integers(0, self.t, I, dtype=np.uint64)
         return SS.sub_mod(cross, mask, self.t), mask
 
 

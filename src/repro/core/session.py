@@ -1,0 +1,295 @@
+"""PiTSession: an explicit compile → preprocess → run lifecycle for
+private transformer serving.
+
+APINT's headline result is the offline/online split: everything that does
+not depend on the client's input — garbling, the DELPHI HE mask products,
+Beaver triple dealing — can be generated ahead of time and pooled across
+inferences. This module makes that split a first-class API:
+
+    session = compile(model, pcfg, shape=(S, d))   # trace → op-graph Plan
+    bundles = session.preprocess(n)                # ALL offline work, n×
+    y = session.run(x, bundles[0])                 # online phase only
+
+``compile`` traces ``PrivateTransformer.forward_private`` into a
+declarative :class:`~repro.core.plan.Plan`; ``preprocess`` executes every
+op's ``*_offline`` protocol leg (with one *batched* garbling call per
+cached netlist across the whole bundle batch) and returns poolable
+:class:`PreprocessedBundle`\\ s; ``run`` replays the plan against one
+bundle, touching only ``channel_online``. A bundle is single-use — holding
+fresh garbled tables and masks is exactly what makes the online phase
+secure — so ``run`` raises :class:`BundleExhausted` on reuse.
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.config import PrivacyConfig
+from repro.core import garble as G
+from repro.core import secret_sharing as SS
+from repro.core.netlist import Netlist
+from repro.core.plan import GC_KINDS, OpSpec, Plan, RegRef, compile_plan
+from repro.core.protocol import PiTProtocol, Stats
+
+_bundle_counter = itertools.count()
+
+
+class BundleExhausted(RuntimeError):
+    """Raised when ``run`` is asked to reuse a consumed (or foreign) bundle."""
+
+
+@dataclass
+class PreprocessedBundle:
+    """Offline material for exactly one online inference.
+
+    ``session_id`` pins the bundle to the session whose garbled circuits
+    and HE masks it holds — structural plan equality is not enough, since
+    two same-shape models would otherwise silently swap weights.
+    """
+
+    plan_id: str
+    session_id: int
+    parts: Dict[str, object]
+    bundle_id: int = field(default_factory=lambda: next(_bundle_counter))
+    consumed: bool = False
+
+
+class PiTSession:
+    """Executes a compiled :class:`Plan` in two explicit phases."""
+
+    def __init__(self, plan: Plan, weights: Sequence, pcfg: PrivacyConfig,
+                 *, seed: int = 0, impl: str = "ref",
+                 protocol: Optional[PiTProtocol] = None):
+        assert plan.n_layers == len(weights)
+        self.plan = plan
+        self.weights = list(weights)
+        self.protocol = protocol or PiTProtocol(pcfg, seed=seed, impl=impl)
+        if self.protocol.frac != plan.frac or \
+                self.protocol.pcfg.layernorm_offload != plan.layernorm_offload:
+            raise ValueError(
+                f"privacy config (frac_bits={self.protocol.frac}, "
+                f"layernorm_offload={self.protocol.pcfg.layernorm_offload}) "
+                f"disagrees with the traced plan ({plan.plan_id}); recompile "
+                f"from a model built with this config")
+        # quantized weights are bundle-invariant: cache once per linear op
+        self._quantized: Dict[str, tuple] = {}
+        self._session_id = next(_bundle_counter)
+
+    # ------------------------------------------------------------------
+    @property
+    def stats(self) -> Stats:
+        return self.protocol.stats
+
+    def _weight(self, op: OpSpec) -> np.ndarray:
+        W = self.weights[op.attrs["layer"]]
+        w = getattr(W, op.attrs["weight"])
+        scale = op.attrs.get("wscale", 1.0)
+        return w * scale if scale != 1.0 else w
+
+    def _ln_params(self, op: OpSpec) -> Tuple[np.ndarray, np.ndarray]:
+        W = self.weights[op.attrs["layer"]]
+        which = op.attrs["which"]
+        return getattr(W, f"{which}_g"), getattr(W, f"{which}_b")
+
+    def _gc_net(self, op: OpSpec) -> Netlist:
+        """The cached netlist backing a GC-kind op."""
+        p = self.protocol
+        if op.kind == "trunc":
+            return p.trunc_net(op.in_scale)
+        if op.kind == "gc_apply":
+            circ = op.attrs["circuit"]
+            if circ == "softmax":
+                return p.softmax_net(op.attrs["row_len"], op.in_scale)
+            return p.activation_net(circ, op.in_scale)
+        if op.kind == "layernorm":
+            n = op.shape[1]
+            if p.pcfg.layernorm_offload:
+                return p.layernorm_reduced_net(n, op.in_scale)
+            return p.layernorm_full_net(n, op.in_scale)
+        raise ValueError(op.kind)
+
+    # ------------------------------------------------------------------
+    # offline phase
+    # ------------------------------------------------------------------
+    def preprocess(self, n: int = 1) -> List[PreprocessedBundle]:
+        """Execute all offline work for ``n`` future requests up front.
+
+        Garbling is batched per cached netlist: every netlist appearing in
+        the plan is garbled in ONE call covering all its instances across
+        all ops and all ``n`` bundles, then sliced per use. HE mask
+        products, output masks and Beaver triples are drawn per bundle.
+        """
+        if n < 1:
+            raise ValueError("preprocess needs n >= 1")
+        p = self.protocol
+        plan = self.plan
+        with p.stats.phase("offline"):
+            # ---- one garbling call per distinct netlist ----------------
+            gc_ops = [(op, self._gc_net(op), plan.gc_instances(op))
+                      for op in plan.ops if op.kind in GC_KINDS]
+            per_req: Dict[str, int] = {}
+            nets: Dict[str, Netlist] = {}
+            for _, net, I in gc_ops:
+                per_req[net.name] = per_req.get(net.name, 0) + I
+                nets[net.name] = net
+            slabs = {
+                name: G.garble(nets[name], p._next_key(), per_req[name] * n,
+                               impl=p.impl)
+                for name in nets
+            }
+            offsets = {name: 0 for name in nets}
+
+            def take(net: Netlist, I: int) -> G.GarbledCircuit:
+                lo = offsets[net.name]
+                offsets[net.name] = lo + I
+                return G.slice_instances(slabs[net.name], lo, lo + I)
+
+            # ---- per-bundle correlations -------------------------------
+            bundles: List[PreprocessedBundle] = []
+            for _ in range(n):
+                parts: Dict[str, object] = {}
+                for op in plan.ops:
+                    if op.kind == "linear":
+                        if op.name not in self._quantized:
+                            self._quantized[op.name] = p.quantize_weight(
+                                self._weight(op))
+                        parts[op.name] = p.linear_offline(
+                            None, plan.read_shape(op.reads[0]),
+                            quantized=self._quantized[op.name])
+                    elif op.kind == "beaver_matmul":
+                        m, k = plan.read_shape(op.reads[0])
+                        _, nn = plan.read_shape(op.reads[1])
+                        parts[op.name] = p.beaver_offline(m, k, nn)
+                    elif op.kind == "trunc":
+                        I = plan.gc_instances(op)
+                        parts[op.name] = p.trunc_offline(
+                            op.in_scale, I, gcirc=take(self._gc_net(op), I))
+                    elif op.kind == "gc_apply":
+                        I = plan.gc_instances(op)
+                        circ = op.attrs["circuit"]
+                        if circ == "softmax":
+                            parts[op.name] = p.softmax_offline(
+                                op.attrs["row_len"], op.in_scale, I,
+                                gcirc=take(self._gc_net(op), I))
+                        else:
+                            parts[op.name] = p.activation_offline(
+                                circ, op.in_scale, I,
+                                gcirc=take(self._gc_net(op), I))
+                    elif op.kind == "layernorm":
+                        I = plan.gc_instances(op)
+                        gamma, beta = self._ln_params(op)
+                        parts[op.name] = p.layernorm_offline(
+                            op.shape[1], I, op.in_scale, gamma, beta,
+                            gcirc=take(self._gc_net(op), I))
+                    else:
+                        raise ValueError(op.kind)
+                bundles.append(PreprocessedBundle(
+                    plan.plan_id, self._session_id, parts))
+        return bundles
+
+    # ------------------------------------------------------------------
+    # online phase
+    # ------------------------------------------------------------------
+    def run(self, x: np.ndarray, bundle: PreprocessedBundle) -> np.ndarray:
+        """Online phase only: serve one request against one bundle."""
+        if bundle.consumed:
+            raise BundleExhausted(
+                f"bundle {bundle.bundle_id} already consumed — preprocess "
+                f"more bundles or refill the pool")
+        if (bundle.plan_id != self.plan.plan_id
+                or bundle.session_id != self._session_id):
+            raise BundleExhausted(
+                f"bundle {bundle.bundle_id} was preprocessed by another "
+                f"session (for {bundle.plan_id}), not this one "
+                f"({self.plan.plan_id})")
+        x = np.asarray(x, np.float64)
+        if x.shape != (self.plan.seq_len, self.plan.d):
+            raise ValueError(
+                f"input shape {x.shape} != bucket shape "
+                f"{(self.plan.seq_len, self.plan.d)}")
+        bundle.consumed = True
+        p = self.protocol
+        plan = self.plan
+        with p.stats.phase("online"):
+            regs: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
+            regs["x"] = p.share_input(x)
+            for op in plan.ops:
+                part = bundle.parts[op.name]
+                rd = [self._read(regs, ref) for ref in op.reads]
+                if op.kind == "linear":
+                    out = p.linear_online(part, *rd[0])
+                elif op.kind == "beaver_matmul":
+                    out = p.beaver_online(part, *rd[0], *rd[1])
+                elif op.kind == "trunc":
+                    out = p.trunc_online(part, *rd[0])
+                elif op.kind == "gc_apply":
+                    if op.attrs["circuit"] == "softmax":
+                        out = p.gc_online(part, *rd[0])
+                    else:
+                        out = p.activation_online(part, *rd[0])
+                elif op.kind == "layernorm":
+                    hc, hs = rd[0]
+                    for (ac, as_) in rd[1:]:  # residual adds
+                        hc = SS.add_mod(hc, ac, p.t)
+                        hs = SS.add_mod(hs, as_, p.t)
+                    out = p.layernorm_online(part, hc, hs)
+                else:
+                    raise ValueError(op.kind)
+                self._write(regs, op.write, out)
+            return p.reveal(*regs[plan.output_reg])
+
+    def _read(self, regs, ref: RegRef) -> Tuple[np.ndarray, np.ndarray]:
+        c, s = regs[ref.reg]
+        if ref.cols is not None:
+            lo, hi = ref.cols
+            c, s = c[:, lo:hi], s[:, lo:hi]
+        if ref.transpose:
+            c, s = c.T.copy(), s.T.copy()
+        return c, s
+
+    def _write(self, regs, ref: RegRef, out) -> None:
+        oc, os_ = out
+        if ref.cols is None:
+            regs[ref.reg] = (oc, os_)
+            return
+        if ref.reg not in regs:
+            shape = self.plan.reg_shapes[ref.reg]
+            regs[ref.reg] = (np.zeros(shape, np.uint64),
+                             np.zeros(shape, np.uint64))
+        lo, hi = ref.cols
+        regs[ref.reg][0][:, lo:hi] = oc
+        regs[ref.reg][1][:, lo:hi] = os_
+
+
+def compile(model, pcfg: Optional[PrivacyConfig] = None,
+            shape: Union[int, Tuple[int, ...], None] = None,
+            *, seed: Optional[int] = None,
+            impl: Optional[str] = None) -> PiTSession:
+    """Trace ``model.forward_private`` into a Plan and wrap it in a session.
+
+    ``model``: a ``PrivateTransformer`` (or any object with ``d``, ``h``,
+    ``hd``, ``d_ff``, ``weights``, ``activation``, ``scale_q`` and a
+    protocol ``p``). ``shape`` is the request bucket: ``(seq_len, d)`` or
+    just ``seq_len``. ``pcfg`` defaults to the model's privacy config; the
+    session gets its own protocol instance so its phase ledgers start
+    clean and bundles never alias the model's eager state.
+    """
+    if shape is None:
+        raise ValueError("compile needs the request bucket shape (S, d)")
+    if isinstance(shape, (tuple, list)):
+        seq_len = int(shape[0])
+        if len(shape) > 1 and int(shape[1]) != model.d:
+            raise ValueError(f"shape {shape} does not match model d={model.d}")
+    else:
+        seq_len = int(shape)
+    plan = compile_plan(model, seq_len)
+    pcfg = pcfg or model.p.pcfg
+    return PiTSession(
+        plan, model.weights, pcfg,
+        seed=seed if seed is not None else 0,
+        impl=impl or model.p.impl,
+    )

@@ -34,6 +34,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.config import ModelConfig
 from repro.models.layers import dense_init, _act
+from repro.utils.compat import shard_map
 from repro.models.sharding import active_rules, shard
 
 
@@ -225,12 +226,12 @@ def _moe_ep(cfg, p, x):
         args = (x, gates, idx, p["expert_w1"], p["expert_w2"])
     out_spec = (P(bspec, "model", None) if use_scatter
                 else P(bspec, None, None))
-    y = jax.shard_map(
+    y = shard_map(
         body,
         mesh=mesh,
         in_specs=in_specs,
         out_specs=out_spec,
-        check_vma=False,
+        check=False,
     )(*args)
     return y, aux
 

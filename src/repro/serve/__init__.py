@@ -1,3 +1,13 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.private_engine import (
+    BundlePoolEmpty,
+    PrivateRequest,
+    PrivateServeEngine,
+)
 
-__all__ = ["ServeEngine"]
+__all__ = [
+    "ServeEngine",
+    "PrivateServeEngine",
+    "PrivateRequest",
+    "BundlePoolEmpty",
+]

@@ -1,0 +1,168 @@
+"""Private serving: sequence-length buckets + preprocessed-bundle pools.
+
+The plaintext ``ServeEngine`` batches token requests against jitted
+prefill/decode; this is its privacy-plane sibling. Each sequence length
+gets its own compiled :class:`~repro.core.session.PiTSession` (shapes and
+scales are resolved per bucket at compile time), and each bucket owns a
+pool of single-use :class:`~repro.core.session.PreprocessedBundle`\\ s.
+
+The pool is refillable in the background (``refill_async``) so the
+offline phase — the dominant cost — overlaps idle time between request
+waves; ``serve`` then only pays the online phase per request. When a
+bucket's pool runs dry the engine either preprocesses on demand
+(``auto_refill=True``) or raises :class:`BundlePoolEmpty` so the caller
+can shed load — the production behaviour for latency-SLO serving.
+
+Locking is per bucket: each sequence length owns an independent
+session (its own protocol, RNG and stats), so refill and serving of one
+bucket never stall another. Within a bucket, offline refill and online
+runs still serialize — the in-process protocol shares one RNG/stats
+object, and correctness beats concurrency there.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from dataclasses import dataclass
+from typing import Deque, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.session import PiTSession, PreprocessedBundle, compile
+
+
+class BundlePoolEmpty(RuntimeError):
+    """No preprocessed bundle available for the request's bucket."""
+
+
+@dataclass
+class PrivateRequest:
+    x: np.ndarray  # (S, d) client-private embeddings
+    result: Optional[np.ndarray] = None
+
+
+class PrivateServeEngine:
+    def __init__(self, model, *, buckets: Sequence[int] = (),
+                 pool_target: int = 2, auto_refill: bool = False,
+                 num_cores: int = 16):
+        """``model``: a ``PrivateTransformer`` (server-owned weights).
+
+        ``buckets`` pre-compiles sessions for those sequence lengths;
+        other lengths compile lazily on first sight. ``pool_target`` is
+        the per-bucket bundle level ``maintain`` refills to.
+        """
+        self.model = model
+        self.pool_target = pool_target
+        self.auto_refill = auto_refill
+        self.num_cores = num_cores
+        self._sessions: Dict[int, PiTSession] = {}
+        self._pools: Dict[int, Deque[PreprocessedBundle]] = {}
+        self._locks: Dict[int, threading.Lock] = {}
+        self._meta = threading.Lock()  # guards bucket creation only
+        for S in buckets:
+            self.session(S)
+
+    # ------------------------------------------------------------------
+    # buckets & pools
+    # ------------------------------------------------------------------
+    def session(self, seq_len: int) -> PiTSession:
+        with self._meta:
+            if seq_len not in self._sessions:
+                self._sessions[seq_len] = compile(
+                    self.model, shape=(seq_len, self.model.d), seed=seq_len)
+                self._pools[seq_len] = deque()
+                self._locks[seq_len] = threading.Lock()
+            return self._sessions[seq_len]
+
+    def _bucket_lock(self, seq_len: int) -> threading.Lock:
+        self.session(seq_len)
+        return self._locks[seq_len]
+
+    def pool_size(self, seq_len: int) -> int:
+        with self._meta:
+            return len(self._pools.get(seq_len, ()))
+
+    def preprocess(self, seq_len: int, count: int) -> int:
+        """Synchronously add ``count`` bundles to the bucket's pool."""
+        sess = self.session(seq_len)
+        with self._bucket_lock(seq_len):
+            bundles = sess.preprocess(count)
+            self._pools[seq_len].extend(bundles)
+            return len(self._pools[seq_len])
+
+    def maintain(self, seq_len: int) -> int:
+        """Top the bucket's pool back up to ``pool_target``.
+
+        Deficit is computed under the bucket lock so concurrent refills
+        don't both see it and overshoot the target.
+        """
+        sess = self.session(seq_len)
+        with self._bucket_lock(seq_len):
+            deficit = self.pool_target - len(self._pools[seq_len])
+            if deficit > 0:
+                self._pools[seq_len].extend(sess.preprocess(deficit))
+            return len(self._pools[seq_len])
+
+    def refill_async(self, seq_len: int, count: Optional[int] = None
+                     ) -> threading.Thread:
+        """Refill the bucket's pool on a background thread."""
+        def work():
+            if count is None:
+                self.maintain(seq_len)
+            else:
+                self.preprocess(seq_len, count)
+
+        th = threading.Thread(target=work, daemon=True,
+                              name=f"pit-refill-S{seq_len}")
+        th.start()
+        return th
+
+    def _take_bundle(self, seq_len: int) -> PreprocessedBundle:
+        """Pop one bundle; caller must hold the bucket lock."""
+        pool = self._pools[seq_len]
+        if pool:
+            return pool.popleft()
+        if self.auto_refill:
+            return self._sessions[seq_len].preprocess(1)[0]
+        raise BundlePoolEmpty(
+            f"no preprocessed bundle for bucket S={seq_len} "
+            f"(pool empty; call preprocess/refill_async or enable "
+            f"auto_refill)")
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def serve(self, requests: List[PrivateRequest]) -> List[PrivateRequest]:
+        """Serve a wave of requests, bucketed by sequence length.
+
+        Requests of the same length form one batch against one session;
+        each request consumes one pooled bundle (online phase only).
+        """
+        by_len: Dict[int, List[PrivateRequest]] = {}
+        for r in requests:
+            by_len.setdefault(int(np.asarray(r.x).shape[0]), []).append(r)
+        for S, batch in by_len.items():
+            sess = self.session(S)
+            with self._bucket_lock(S):
+                for r in batch:
+                    bundle = self._take_bundle(S)
+                    try:
+                        r.result = sess.run(r.x, bundle)
+                    except Exception:
+                        if not bundle.consumed:
+                            # e.g. bad request shape: the (expensive)
+                            # bundle is still fresh — return it to the pool
+                            self._pools[S].appendleft(bundle)
+                        raise
+        return requests
+
+    # ------------------------------------------------------------------
+    # introspection
+    # ------------------------------------------------------------------
+    def stats(self, seq_len: int):
+        return self.session(seq_len).stats
+
+    def schedule_info(self, seq_len: int) -> List[List[str]]:
+        """Coarse-grained GC-op → accelerator-core assignment (§3.3.1)."""
+        return self.session(seq_len).plan.coarse_schedule(self.num_cores)

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.utils.compat import shard_map
+
 
 def _quant(x):
     scale = jnp.max(jnp.abs(x)) / 127.0 + 1e-12
@@ -84,8 +86,8 @@ def compressed_psum(x, axis_name: str, mesh):
     fn = partial(_ring_allreduce_int8, axis_name=axis_name)
     other = tuple(a for a in mesh.axis_names if a != axis_name)
     spec = P()  # replicated input/output w.r.t. all axes
-    return jax.shard_map(
-        fn, mesh=mesh, in_specs=spec, out_specs=spec, check_vma=False
+    return shard_map(
+        fn, mesh=mesh, in_specs=spec, out_specs=spec, check=False
     )(x)
 
 

@@ -1,0 +1,22 @@
+"""Version compatibility shims for the jax API surface we rely on."""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` with the check kwarg spelled for the installed
+    version (``check_vma`` post-rename, ``check_rep`` before), falling
+    back to ``jax.experimental.shard_map`` when it isn't public yet."""
+    import inspect
+
+    if hasattr(jax, "shard_map"):
+        impl = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map as impl
+    kw = ("check_vma"
+          if "check_vma" in inspect.signature(impl).parameters
+          else "check_rep")
+    return impl(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                **{kw: check})

@@ -1,0 +1,94 @@
+"""Tiny offline stand-in for the ``hypothesis`` API surface these tests
+use (``given``/``settings``/``st.integers``/``st.tuples``/``st.lists``).
+
+When hypothesis is installed the real library is used (see the guarded
+imports in the test modules); otherwise this shim runs each property test
+on ``max_examples`` deterministic pseudo-random draws so the suite still
+collects and exercises the properties without the dependency.
+"""
+
+from __future__ import annotations
+
+import inspect
+import random
+
+
+class _Strategy:
+    def example(self, rng: random.Random):
+        raise NotImplementedError
+
+
+class _Integers(_Strategy):
+    def __init__(self, lo, hi):
+        self.lo, self.hi = lo, hi
+
+    def example(self, rng):
+        return rng.randint(self.lo, self.hi)
+
+
+class _Tuples(_Strategy):
+    def __init__(self, parts):
+        self.parts = parts
+
+    def example(self, rng):
+        return tuple(p.example(rng) for p in self.parts)
+
+
+class _Lists(_Strategy):
+    def __init__(self, elem, min_size=0, max_size=None):
+        self.elem = elem
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng):
+        size = rng.randint(self.min_size, self.max_size)
+        return [self.elem.example(rng) for _ in range(size)]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value, max_value):
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def tuples(*parts):
+        return _Tuples(parts)
+
+    @staticmethod
+    def lists(elem, min_size=0, max_size=None):
+        return _Lists(elem, min_size=min_size, max_size=max_size)
+
+
+def settings(max_examples=10, deadline=None, **_ignored):
+    def deco(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**drawn):
+    """Run the test on N deterministic draws; fixture args pass through."""
+
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_shim_max_examples", 10)
+            rng = random.Random(f"shim:{fn.__module__}.{fn.__name__}")
+            for _ in range(n):
+                vals = {k: s.example(rng) for k, s in drawn.items()}
+                fn(*args, **kwargs, **vals)
+
+        # pytest must only see the fixture parameters, not the drawn ones
+        sig = inspect.signature(fn)
+        params = [p for name, p in sig.parameters.items() if name not in drawn]
+        wrapper.__signature__ = sig.replace(parameters=params)
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        wrapper._shim_max_examples = getattr(fn, "_shim_max_examples", 10)
+        return wrapper
+
+    return deco
+
+
+st = strategies

@@ -4,7 +4,10 @@ circuits + arithmetic circuit properties + Bristol roundtrip."""
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI: deterministic fallback shim
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core.circuits import arith, bristol
 from repro.core.circuits.builder import CircuitBuilder

@@ -3,7 +3,10 @@
 import jax
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # offline CI: deterministic fallback shim
+    from _hyp_fallback import given, settings, strategies as st
 
 from repro.core import he as HE
 

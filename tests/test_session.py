@@ -1,0 +1,143 @@
+"""The compile → preprocess → run lifecycle: phase separation, bundle
+pooling, parity with the legacy eager path, and pool exhaustion."""
+
+import numpy as np
+import pytest
+
+from repro.config import PrivacyConfig
+from repro.core.engine import PrivateTransformer, random_weights
+from repro.core.plan import GC_KINDS, compile_plan
+from repro.core.session import BundleExhausted, compile
+from repro.serve import BundlePoolEmpty, PrivateRequest, PrivateServeEngine
+
+D, HEADS, DFF, S = 8, 2, 16, 4
+
+
+def _model(seed=0, frac=6):
+    rng = np.random.default_rng(seed)
+    weights = random_weights(rng, D, DFF, 1)
+    pcfg = PrivacyConfig(he_poly_n=256, he_num_primes=3, he_t_bits=40,
+                         frac_bits=frac)
+    return PrivateTransformer(pcfg, D, HEADS, DFF, weights, seed=seed)
+
+
+@pytest.fixture(scope="module")
+def served():
+    """One shared transcript: legacy forward + preprocess(2) + 2 runs."""
+    model = _model()
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (S, D))
+    y_legacy = model.forward_private(x)
+
+    sess = model.compile_session(S)
+    bundles = sess.preprocess(2)
+    snap_pre = sess.stats.comm_snapshot()
+    y1 = sess.run(x, bundles[0])
+    snap_run1 = sess.stats.comm_snapshot()
+    y2 = sess.run(x, bundles[1])
+    snap_run2 = sess.stats.comm_snapshot()
+    return dict(model=model, sess=sess, bundles=bundles, x=x,
+                y_legacy=y_legacy, y1=y1, y2=y2,
+                snaps=(snap_pre, snap_run1, snap_run2))
+
+
+def test_plan_traces_forward_private():
+    plan = compile_plan(_model(), S)
+    kinds = {op.kind for op in plan.ops}
+    assert kinds == {"linear", "beaver_matmul", "gc_apply", "layernorm",
+                     "trunc"}
+    per_layer = 14 + 4 * HEADS  # qkv(6) + 4/head + wo(2) + mlp(4) + 2 LN
+    assert len(plan.ops) == per_layer * plan.n_layers
+    names = [op.name for op in plan.ops]
+    assert len(set(names)) == len(names)  # bundle part keys are unique
+    # shapes/scales resolved for the bucket
+    sm = next(op for op in plan.ops if op.attrs.get("circuit") == "softmax")
+    assert sm.shape == (S, S) and sm.in_scale == 2 * plan.frac
+    # scheduling hook: every GC unit op lands on some core exactly once
+    cores = plan.coarse_schedule(4)
+    flat = [nm for core in cores for nm in core]
+    assert sorted(flat) == sorted(op.name for op in plan.gc_ops())
+
+
+def test_session_matches_legacy_and_float(served):
+    # the session replays the same protocol transcript → identical output
+    assert np.array_equal(served["y1"], served["y_legacy"])
+    assert np.array_equal(served["y2"], served["y1"])
+    # and both track the float reference
+    want = served["model"].forward_float(served["x"])
+    assert np.abs(served["y1"] - want).max() < 0.25
+
+
+def test_phase_split_traffic(served):
+    snap_pre, snap_run1, snap_run2 = served["snaps"]
+    # all garbling/HE/triple traffic metered offline before the first run
+    assert snap_pre["offline"]["total"] > 0
+    assert any(k.startswith("tables") for k in snap_pre["offline"]["by_tag"])
+    assert "beaver" in snap_pre["offline"]["by_tag"]
+    assert "he-enc-r" in snap_pre["offline"]["by_tag"]
+    # runs add ZERO offline traffic…
+    assert snap_run1["offline"] == snap_pre["offline"]
+    assert snap_run2["offline"] == snap_pre["offline"]
+    # …and byte-identical online traffic per run, tag by tag
+    d1 = {k: snap_run1["online"]["by_tag"][k] -
+          snap_pre["online"]["by_tag"].get(k, 0)
+          for k in snap_run1["online"]["by_tag"]}
+    d2 = {k: snap_run2["online"]["by_tag"][k] -
+          snap_run1["online"]["by_tag"].get(k, 0)
+          for k in snap_run2["online"]["by_tag"]}
+    assert d1 == d2
+    assert any(k.startswith("ot") for k in d1)
+
+
+def test_batched_garbling_one_call_per_netlist(served):
+    """Preprocess garbles each distinct netlist once for the whole batch."""
+    sess = served["sess"]
+    plan = sess.plan
+    per_net = {}
+    for op in plan.ops:
+        if op.kind in GC_KINDS:
+            net = sess._gc_net(op)
+            per_net[net.name] = per_net.get(net.name, 0) + plan.gc_instances(op)
+    st = sess.stats
+    for name, per_req in per_net.items():
+        # 2 bundles preprocessed + nothing extra during the runs
+        assert st.per_fn[name]["instances"] == 2 * per_req
+
+
+def test_run_raises_on_consumed_bundle(served):
+    sess = served["sess"]
+    with pytest.raises(BundleExhausted):
+        sess.run(served["x"], served["bundles"][0])
+
+
+def test_run_rejects_foreign_bundles(served):
+    # different bucket shape
+    other = served["model"].compile_session(S + 1)
+    with pytest.raises(BundleExhausted):
+        served["sess"].run(served["x"], other.preprocess(1)[0])
+    # same shape but a different session: structurally identical plan,
+    # different garbled circuits/weights — must not be silently accepted
+    twin = served["model"].compile_session(S, seed=99)
+    with pytest.raises(BundleExhausted):
+        served["sess"].run(served["x"], twin.preprocess(1)[0])
+
+
+def test_private_engine_pool_and_exhaustion():
+    model = _model(seed=2)
+    rng = np.random.default_rng(3)
+    engine = PrivateServeEngine(model, buckets=(S,), pool_target=2)
+    assert engine.preprocess(S, 2) == 2
+    reqs = [PrivateRequest(x=rng.normal(0, 1, (S, D))) for _ in range(2)]
+    engine.serve(reqs)
+    want0 = model.forward_float(reqs[0].x)
+    assert np.abs(reqs[0].result - want0).max() < 0.25
+    assert reqs[1].result is not None
+    assert engine.pool_size(S) == 0
+    # pool dry + no auto refill → clean failure for load shedding
+    with pytest.raises(BundlePoolEmpty):
+        engine.serve([PrivateRequest(x=rng.normal(0, 1, (S, D)))])
+    # background refill path tops the pool back up
+    engine.refill_async(S, 1).join(timeout=600)
+    assert engine.pool_size(S) == 1
+    st = engine.stats(S)
+    assert st.offline.channel.total > 0 and st.online.channel.total > 0

@@ -100,12 +100,18 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import jax, numpy as np, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 from repro.train.compression import _ring_allreduce_int8
+from repro.utils.compat import shard_map
+if jax.device_count() < 8:
+    # host platform override not honored (e.g. a real accelerator backend
+    # won the platform pick); the 8-way mesh below can't be built
+    print("SKIP: fewer than 8 devices")
+    raise SystemExit(0)
 mesh = jax.make_mesh((8,), ("data",))
 rng = np.random.default_rng(0)
 parts = rng.normal(0, 1, (8, 1, 64)).astype(np.float32)  # distinct per rank
-fn = jax.shard_map(
+fn = shard_map(
     lambda x: _ring_allreduce_int8(x[0], "data")[None],
-    mesh=mesh, in_specs=P("data"), out_specs=P("data"), check_vma=False,
+    mesh=mesh, in_specs=P("data"), out_specs=P("data"), check=False,
 )
 res = np.asarray(fn(jnp.asarray(parts)))  # (8, 1, 64): each rank's result
 want = parts.sum(0)[0]
@@ -120,4 +126,6 @@ print("OK")
         capture_output=True, text=True, cwd=os.path.dirname(
             os.path.dirname(os.path.abspath(__file__))),
     )
+    if "SKIP" in r.stdout:
+        pytest.skip("fewer than 8 jax devices available in subprocess")
     assert "OK" in r.stdout, r.stdout + r.stderr
