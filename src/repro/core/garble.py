@@ -10,12 +10,25 @@ MIMD cores walking a serial netlist, gates are processed one topological
 The paper's coarse-grained scheduling (independent softmax rows -> cores)
 becomes the leading `instances` dim, which also shards over the `data` mesh
 axis at scale. Garbled tables are produced per (instance, AND-gate).
+
+Two execution paths share one interface, selected by ``impl`` (resolved by
+:func:`repro.kernels.dispatch.resolve_impl`):
+
+  "ref"                      the per-level numpy walk below — the oracle
+  "jit"/"pallas"/"pallas_*"  the device-resident executor
+                             (:mod:`repro.core.gc_exec`): the whole walk
+                             compiled into one jitted call through the
+                             fused ``kernels/level_eval`` pass, cached per
+                             ``(netlist, instances)``
+
+``auto`` therefore never drops to the host loop: it resolves to the
+device-resident path everywhere ("pallas" on TPU, "jit" elsewhere).
 """
 
 from __future__ import annotations
 
-from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -23,24 +36,60 @@ import numpy as np
 
 from repro.core import labels as LB
 from repro.core.netlist import Netlist, OP_AND, OP_INV, OP_XOR
-from repro.kernels.halfgate import ops as HG
+from repro.core.gc_exec import get_executor
+from repro.kernels.dispatch import resolve_impl
 from repro.kernels.halfgate import ref_np as HGNP
+
+#: ``active`` argument of :func:`evaluate`: either the legacy per-wire dict
+#: or a packed ``(wire_ids (n,), labels (I, n, 4))`` pair — the packed form
+#: is what the online protocol path uses (no per-wire host work).
+ActiveLabels = Union[Dict[int, jnp.ndarray], Tuple[np.ndarray, jnp.ndarray]]
 
 
 @dataclass
 class GarbledCircuit:
-    """Garbler-side artifact for a batch of instances."""
+    """Garbler-side artifact for a batch of instances.
+
+    Input zero-labels are position-indexed: ``input_zero[:, j]`` is the
+    zero-label of wire ``input_wires[j]`` (garbler inputs, then evaluator
+    inputs, then constant wires). ``input_positions`` maps wire ids to
+    positions through a dense lookup so encode never does per-wire dict
+    stacking.
+    """
 
     net: Netlist
     r: jnp.ndarray  # (I, 4)
-    input_zero: Dict[int, jnp.ndarray]  # wire -> (I, 4) zero-label
+    input_wires: np.ndarray  # (n_in,) wire ids in position order
+    input_zero: jnp.ndarray  # (I, n_in, 4) zero-labels, position-indexed
     tables: jnp.ndarray  # (I, nAND, 2, 4)
     output_perm: jnp.ndarray  # (I, n_out) color bit of the FALSE label
     wire_zero: Optional[jnp.ndarray] = None  # (I, W, 4) if kept
+    _pos: Optional[np.ndarray] = field(default=None, repr=False)
 
     @property
     def num_instances(self) -> int:
         return self.r.shape[0]
+
+    def input_positions(self, wire_ids) -> np.ndarray:
+        """Positions of ``wire_ids`` in the packed ``input_zero`` array."""
+        if self._pos is None:
+            pos = np.full(self.net.num_wires, -1, np.int64)
+            pos[self.input_wires] = np.arange(len(self.input_wires))
+            self._pos = pos
+        p = self._pos[np.asarray(wire_ids, np.int64)]
+        if len(p) and p.min(initial=0) < 0:
+            raise KeyError("wire ids are not input/const wires")
+        return p
+
+
+def _input_ids(net: Netlist) -> np.ndarray:
+    """Position order of the packed input labels (stable across paths)."""
+    if not net.num_wires:
+        return np.array([], np.int64)
+    return np.concatenate([
+        net.garbler_inputs, net.evaluator_inputs,
+        np.array(sorted(net.const_bits), dtype=np.int64),
+    ]).astype(np.int64)
 
 
 def _plan(net: Netlist):
@@ -76,12 +125,33 @@ def garble(
     impl: str = "auto",
     keep_wires: bool = False,
 ) -> GarbledCircuit:
-    """Wire store is an in-place numpy array (levels mutate O(level) rows);
-    only the Half-Gate cipher batches go through jnp/Pallas."""
+    """Garble ``instances`` independent copies of ``net``.
+
+    ``impl="ref"``: host-side numpy walk (levels mutate O(level) rows in
+    place; only the Half-Gate cipher batches go through jnp). Any other
+    impl: the whole walk runs inside one jitted device executor. Both
+    paths draw labels from the same key stream, so they are bit-exact.
+    """
+    impl = resolve_impl(impl)
     I, W = instances, net.num_wires
     k_r, k_w = jax.random.split(key)
-    r = np.asarray(LB.random_delta(k_r, (I,)))  # (I, 4)
+    in_ids = _input_ids(net)
 
+    if impl != "ref":
+        exe = get_executor(net, I, impl)
+        plan = exe.plan
+        r = LB.random_delta(k_r, (I,))
+        src_labels = LB.random_labels(k_w, (I, len(plan.source_ids)))
+        res = exe.garble(src_labels, r, keep_wires=keep_wires)
+        src_zero, tables, out_perm = res[:3]
+        in_zero = src_zero[:, plan.source_positions(in_ids)]
+        return GarbledCircuit(
+            net=net, r=r, input_wires=in_ids, input_zero=in_zero,
+            tables=tables, output_perm=out_perm,
+            wire_zero=res[3] if keep_wires else None,
+        )
+
+    r = np.asarray(LB.random_delta(k_r, (I,)))  # (I, 4)
     wire0 = np.zeros((I, W, 4), np.uint32)
     # fresh zero-labels for all non-gate-output wires (inputs + constants)
     src = np.ones(W, bool)
@@ -105,19 +175,10 @@ def garble(
             out0[:, vi] = a0[:, vi] ^ r[:, None, :]
         if len(ai):
             tw = step["and_slot"][ai].astype(np.uint32)
-            if impl in ("auto", "ref"):
-                c0, tg, te = HGNP.garble_and_gates(
-                    a0[:, ai], b0[:, ai], r[:, None, :],
-                    np.broadcast_to(tw[None, :], (I, len(ai))),
-                )
-            else:
-                c0, tg, te = HG.garble_and_gates(
-                    jnp.asarray(a0[:, ai]),
-                    jnp.asarray(b0[:, ai]),
-                    jnp.asarray(r[:, None, :]),
-                    jnp.broadcast_to(jnp.asarray(tw)[None, :], (I, len(ai))),
-                    impl=impl,
-                )
+            c0, tg, te = HGNP.garble_and_gates(
+                a0[:, ai], b0[:, ai], r[:, None, :],
+                np.broadcast_to(tw[None, :], (I, len(ai))),
+            )
             out0[:, ai] = np.asarray(c0)
             tables[:, step["and_slot"][ai], 0] = np.asarray(tg)
             tables[:, step["and_slot"][ai], 1] = np.asarray(te)
@@ -128,15 +189,11 @@ def garble(
         if len(net.outputs)
         else np.zeros((I, 0), np.uint32)
     )
-    in_ids = np.concatenate([
-        net.garbler_inputs, net.evaluator_inputs,
-        np.array(sorted(net.const_bits), dtype=np.int64),
-    ]).astype(np.int64) if W else np.array([], np.int64)
-    in_zero = {int(w): jnp.asarray(wire0[:, w]) for w in in_ids}
     return GarbledCircuit(
         net=net,
         r=jnp.asarray(r),
-        input_zero=in_zero,
+        input_wires=in_ids,
+        input_zero=jnp.asarray(wire0[:, in_ids]),
         tables=jnp.asarray(tables),
         output_perm=jnp.asarray(out_perm),
         wire_zero=wire0 if keep_wires else None,
@@ -152,11 +209,18 @@ def slice_instances(gc: GarbledCircuit, lo: int, hi: int) -> GarbledCircuit:
     return GarbledCircuit(
         net=gc.net,
         r=gc.r[lo:hi],
-        input_zero={w: z[lo:hi] for w, z in gc.input_zero.items()},
+        input_wires=gc.input_wires,
+        input_zero=gc.input_zero[lo:hi],
         tables=gc.tables[lo:hi],
         output_perm=gc.output_perm[lo:hi],
         wire_zero=None if gc.wire_zero is None else gc.wire_zero[lo:hi],
+        _pos=gc._pos,
     )
+
+
+def input_zeros(gc: GarbledCircuit, wire_ids: Sequence[int]) -> jnp.ndarray:
+    """Zero-labels for the given input/const wires: one gather, (I, n, 4)."""
+    return gc.input_zero[:, gc.input_positions(wire_ids)]
 
 
 def encode_inputs(gc: GarbledCircuit, wire_ids: Sequence[int], bits) -> jnp.ndarray:
@@ -166,39 +230,73 @@ def encode_inputs(gc: GarbledCircuit, wire_ids: Sequence[int], bits) -> jnp.ndar
     inputs). Returns (I, n, 4).
     """
     bits = jnp.asarray(bits, jnp.uint32)
-    zero = jnp.stack([gc.input_zero[int(w)] for w in wire_ids], axis=1)  # (I,n,4)
-    return LB.maybe_xor(zero, bits, gc.r[:, None, :])
+    return LB.maybe_xor(input_zeros(gc, wire_ids), bits, gc.r[:, None, :])
+
+
+def const_wires_labels(gc: GarbledCircuit) -> Tuple[np.ndarray, jnp.ndarray]:
+    """Active labels of constant wires, packed: (wire_ids, (I, n_c, 4))."""
+    if not gc.net.const_bits:
+        return (np.array([], np.int64),
+                jnp.zeros((gc.num_instances, 0, 4), jnp.uint32))
+    wires = np.array(sorted(gc.net.const_bits), np.int64)
+    bits = np.array([gc.net.const_bits[int(w)] for w in wires], np.uint32)
+    lab = encode_inputs(gc, wires, np.broadcast_to(bits, (gc.num_instances,
+                                                          len(wires))))
+    return wires, lab
 
 
 def const_labels(gc: GarbledCircuit) -> Dict[int, jnp.ndarray]:
     """Active labels of constant wires (garbler supplies with the tables)."""
-    out = {}
-    for w, bit in gc.net.const_bits.items():
-        zero = gc.input_zero[int(w)]
-        if bit:
-            out[int(w)] = zero ^ gc.r
-        else:
-            out[int(w)] = zero
-    return out
+    wires, lab = const_wires_labels(gc)
+    return {int(w): lab[:, j] for j, w in enumerate(wires)}
+
+
+def _pack_active(active: ActiveLabels) -> Tuple[np.ndarray, jnp.ndarray]:
+    """Normalize ``active`` to (host wire_ids, labels (I, n, 4)).
+
+    Labels stay device-resident (jnp) — only the wire ids are needed on
+    the host, to resolve static packing positions.
+    """
+    if isinstance(active, dict):
+        wire_ids = np.fromiter(active.keys(), np.int64, len(active))
+        labels = jnp.stack([jnp.asarray(v) for v in active.values()],
+                           axis=1)
+        return wire_ids, labels
+    wire_ids, labels = active
+    return np.asarray(wire_ids, np.int64), jnp.asarray(labels)
 
 
 def evaluate(
     net: Netlist,
     tables: jnp.ndarray,
-    active: Dict[int, jnp.ndarray],
+    active: ActiveLabels,
     *,
     impl: str = "auto",
 ) -> jnp.ndarray:
     """Evaluator: active labels for all input+const wires -> output labels.
 
-    active: wire -> (I, 4). Returns (I, n_out, 4).
+    ``active``: wire -> (I, 4) dict, or packed (wire_ids, (I, n, 4)).
+    Returns (I, n_out, 4). ``impl="ref"`` is the host-loop oracle; anything
+    else runs the cached device-resident executor — a single jitted call,
+    no per-level host<->device transfers.
     """
-    some = next(iter(active.values()))
-    I = some.shape[0]
+    impl = resolve_impl(impl)
+    wire_ids, labels = _pack_active(active)
+    I = labels.shape[0]
+
+    if impl != "ref":
+        exe = get_executor(net, I, impl)
+        plan = exe.plan
+        # positions are static per netlist; the scatter runs on device so
+        # online labels never round-trip through the host
+        pos = plan.source_positions(wire_ids)
+        packed = jnp.zeros((I, len(plan.source_ids), 4), jnp.uint32)
+        packed = packed.at[:, pos].set(labels.astype(jnp.uint32))
+        return exe.evaluate(packed, tables)
+
     W = net.num_wires
     wires = np.zeros((I, W, 4), np.uint32)
-    for w, lab in active.items():
-        wires[:, int(w)] = np.asarray(lab)
+    wires[:, wire_ids] = np.asarray(labels)
     tables_np = np.asarray(tables)
 
     for step in _plan(net):
@@ -214,21 +312,11 @@ def evaluate(
         if len(ai):
             slots = step["and_slot"][ai]
             tw = slots.astype(np.uint32)
-            if impl in ("auto", "ref"):
-                c = HGNP.eval_and_gates(
-                    a[:, ai], b[:, ai],
-                    tables_np[:, slots, 0], tables_np[:, slots, 1],
-                    np.broadcast_to(tw[None, :], (I, len(ai))),
-                )
-            else:
-                c = HG.eval_and_gates(
-                    jnp.asarray(a[:, ai]),
-                    jnp.asarray(b[:, ai]),
-                    jnp.asarray(tables_np[:, slots, 0]),
-                    jnp.asarray(tables_np[:, slots, 1]),
-                    jnp.broadcast_to(jnp.asarray(tw)[None, :], (I, len(ai))),
-                    impl=impl,
-                )
+            c = HGNP.eval_and_gates(
+                a[:, ai], b[:, ai],
+                tables_np[:, slots, 0], tables_np[:, slots, 1],
+                np.broadcast_to(tw[None, :], (I, len(ai))),
+            )
             out[:, ai] = np.asarray(c)
         wires[:, step["out"]] = out
     return jnp.asarray(wires[:, net.outputs])
@@ -261,15 +349,20 @@ def run_garbled(
     evaluator_bits = jnp.atleast_2d(jnp.asarray(evaluator_bits, jnp.uint32))
     I = garbler_bits.shape[0]
     gc = garble(net, key, I, impl=impl)
-    active: Dict[int, jnp.ndarray] = {}
+    parts = []
     if len(net.garbler_inputs):
-        lab = encode_inputs(gc, net.garbler_inputs, garbler_bits)
-        for j, w in enumerate(net.garbler_inputs):
-            active[int(w)] = lab[:, j]
+        parts.append((np.asarray(net.garbler_inputs, np.int64),
+                      encode_inputs(gc, net.garbler_inputs, garbler_bits)))
     if len(net.evaluator_inputs):
-        lab = encode_inputs(gc, net.evaluator_inputs, evaluator_bits)  # via OT
-        for j, w in enumerate(net.evaluator_inputs):
-            active[int(w)] = lab[:, j]
-    active.update(const_labels(gc))
-    out = evaluate(net, gc.tables, active, impl=impl)
+        parts.append((np.asarray(net.evaluator_inputs, np.int64),
+                      encode_inputs(gc, net.evaluator_inputs,
+                                    evaluator_bits)))  # via OT
+    cw, cl = const_wires_labels(gc)
+    if len(cw):
+        parts.append((cw, cl))
+    wire_ids = np.concatenate([p[0] for p in parts]) if parts else \
+        np.array([], np.int64)
+    labels = jnp.concatenate([p[1] for p in parts], axis=1) if \
+        parts else jnp.zeros((I, 0, 4), jnp.uint32)
+    out = evaluate(net, gc.tables, (wire_ids, labels), impl=impl)
     return decode_outputs(gc, out)

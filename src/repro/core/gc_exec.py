@@ -1,0 +1,293 @@
+"""Device-resident execution of a compiled netlist level plan.
+
+The host-side numpy walk in :mod:`repro.core.garble` pays a Python round
+trip per level: gather labels, dispatch XOR/INV/AND batches separately,
+scatter, repeat. This module compiles the whole walk — wire store,
+gathers, FreeXOR/INV/Half-Gate, scatters — into ONE ``jax.jit`` call per
+``(netlist, instances, impl)``: a ``lax.scan`` over the plan's fixed-shape
+*chunks* (see :class:`~repro.core.netlist.LevelPlan`) whose body evaluates
+one padded level. Because every chunk has the same (and_width, free_width)
+shape, the executable contains a single level body regardless of netlist
+depth, so XLA compile time stays flat in circuit size.
+
+The body is built around what profiling the scan showed matters on a CPU
+host (and costs nothing on TPU):
+
+* the wire store is **row-major** ``(n_rows, I, 4)`` and compactly
+  numbered, so each chunk commits with ONE contiguous
+  ``dynamic_update_slice`` of its ``perm``-ordered lane block — a
+  scattered store, an instance-major store, or a second dynamic write on
+  the same carry all force XLA to copy the whole store every step;
+* AND labels are hashed in **planar** form (four ``(lanes,)`` word
+  planes) via :func:`repro.kernels.halfgate.ref.eval_and_planar` — the
+  packed ``(lanes, 4)`` form lowers to strided scalar code inside the
+  scan, ~50x slower;
+* the ``"jit"`` impl hashes only the AND block (XOR/INV lanes are one
+  vector XOR: INV second inputs read the zero dummy row, so there is no
+  per-lane select anywhere); the ``"pallas"``/``"pallas_interpret"``
+  impls hand the concatenated block to the fused ``kernels/level_eval``
+  pass — one kernel launch per level instead of separate XOR/INV/AND
+  dispatches.
+
+The wire store lives entirely inside the executable (scan carry — XLA
+updates it in place), so a cached evaluate performs zero per-level
+host<->device transfers: one launch in, output labels out. Chunk widths
+come in two regimes (see ``netlist._chunk_widths``): tiny batches get a
+wide/low-chunk-count latency plan, big batches a tight throughput plan.
+
+Executors are cached on the plan, keyed by ``(instances, impl)``;
+``n_traces`` counts actual retraces (it only advances while jax traces the
+body) and ``n_eval_calls`` / ``n_garble_calls`` count invocations, which
+is what the cache-hit and single-dispatch tests assert on.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from repro.core.netlist import (
+    LevelPlan,
+    Netlist,
+    OP_AND,
+    OP_PAD,
+    compile_level_plan,
+)
+from repro.kernels.halfgate import ref as HG
+from repro.kernels.level_eval.level_eval import (
+    eval_level_pallas,
+    garble_level_pallas,
+)
+
+U32 = jnp.uint32
+I32 = jnp.int32
+
+
+def _planar(x):
+    """(lanes, I, 4) labels -> 4-tuple of flat (lanes*I,) word planes."""
+    p = x.transpose(2, 0, 1).reshape(4, -1)
+    return (p[0], p[1], p[2], p[3])
+
+
+def _packed(planes, lanes, instances):
+    return jnp.stack(planes, 0).reshape(4, lanes, instances).transpose(1, 2, 0)
+
+
+class LevelExecutor:
+    """One compiled evaluate/garble walk for a fixed (plan, I, impl)."""
+
+    def __init__(self, plan: LevelPlan, instances: int, impl: str):
+        if impl not in ("jit", "pallas", "pallas_interpret"):
+            raise ValueError(f"device executor impl {impl!r}")
+        self.plan = plan
+        self.instances = int(instances)
+        self.impl = impl
+        self.n_traces = 0
+        self.n_eval_calls = 0
+        self.n_garble_calls = 0
+        K, ca = plan.n_chunks, plan.and_width
+        self.n_src = len(plan.source_ids)
+        # per-chunk scan operands: device-resident once, reused every
+        # call; the four wire-read index blocks are fused into ONE array
+        # so the body issues a single gather per chunk (per-step thunk
+        # count dominates small-batch walks). Arrays a body doesn't touch
+        # (op codes in the jit path) are dead-code-eliminated.
+        self._xs = (
+            jnp.asarray(plan.base, I32),
+            jnp.asarray(np.concatenate(
+                [plan.and_in0, plan.and_in1, plan.free_in0, plan.free_in1],
+                axis=1), I32),
+            jnp.asarray(plan.and_slot, I32),
+            jnp.asarray(plan.perm, I32),
+            jnp.asarray(
+                np.where(plan.and_slot < plan.n_and, OP_AND, OP_PAD), U32),
+            jnp.asarray(plan.free_inv, U32),
+            jnp.asarray(plan.free_ops, U32),
+        )
+        self._outs = jnp.asarray(plan.out_rows, I32)
+        self._wire_rows = jnp.asarray(plan.wire_rows, I32)
+        self._and_rows = jnp.asarray(plan.and_rows, I32)
+        self._eval = jax.jit(self._eval_fn)
+        self._garble = jax.jit(self._garble_fn,
+                               static_argnames=("keep_wires",))
+
+    # ------------------------------------------------------------------
+    # fused-kernel bodies (pallas / pallas_interpret)
+    # ------------------------------------------------------------------
+    def _lanes(self, per_lane):
+        """(lanes,) per-lane scalar -> flat (lanes*I,) lane-major vector."""
+        I = self.instances
+        return jnp.broadcast_to(per_lane[:, None],
+                                (per_lane.shape[0], I)).reshape(-1)
+
+    def _fused_eval(self, and_ops, a, b, tg, te, slot, fops, fa, fb):
+        """Concatenated AND+free block through the fused level kernel."""
+        I = self.instances
+        ca, cf = self.plan.and_width, self.plan.free_width
+        ops = self._lanes(jnp.concatenate([and_ops, fops]))
+        tw = self._lanes(jnp.concatenate(
+            [slot.astype(U32), jnp.zeros((cf,), U32)]))
+        z = jnp.zeros((cf, I, 4), U32)
+        o = eval_level_pallas(
+            ops,
+            jnp.concatenate([a, fa], 0).reshape(-1, 4),
+            jnp.concatenate([b, fb], 0).reshape(-1, 4),
+            jnp.concatenate([tg, z], 0).reshape(-1, 4),
+            jnp.concatenate([te, z], 0).reshape(-1, 4),
+            tw,
+            interpret=(self.impl == "pallas_interpret"),
+        )
+        o = o.reshape(ca + cf, I, 4)
+        return o[:ca], o[ca:]
+
+    def _fused_garble(self, and_ops, a0, b0, slot, r, fops, fa, fb):
+        I = self.instances
+        ca, cf = self.plan.and_width, self.plan.free_width
+        ops = self._lanes(jnp.concatenate([and_ops, fops]))
+        tw = self._lanes(jnp.concatenate(
+            [slot.astype(U32), jnp.zeros((cf,), U32)]))
+        rf = jnp.broadcast_to(r[None], (ca + cf, I, 4)).reshape(-1, 4)
+        c0, tg, te = garble_level_pallas(
+            ops,
+            jnp.concatenate([a0, fa], 0).reshape(-1, 4),
+            jnp.concatenate([b0, fb], 0).reshape(-1, 4),
+            rf, tw,
+            interpret=(self.impl == "pallas_interpret"),
+        )
+        c0 = c0.reshape(ca + cf, I, 4)
+        tg = tg.reshape(ca + cf, I, 4)[:ca]
+        te = te.reshape(ca + cf, I, 4)[:ca]
+        return c0[:ca], c0[ca:], tg, te
+
+    # ------------------------------------------------------------------
+    # evaluate
+    # ------------------------------------------------------------------
+    def _eval_fn(self, active: jnp.ndarray, tables: jnp.ndarray):
+        """active (I, n_src, 4); tables (I, >=nAND, 2, 4) -> (I, n_out, 4)."""
+        self.n_traces += 1  # python side effect: advances only on retrace
+        I, ca = self.instances, self.plan.and_width
+        tabT = jnp.transpose(tables.astype(U32), (1, 2, 0, 3))
+        wires = jnp.zeros((self.plan.n_rows, I, 4), U32)
+        wires = lax.dynamic_update_slice(
+            wires, active.astype(U32).transpose(1, 0, 2),
+            (I32(0), I32(0), I32(0)))
+
+        cf = self.plan.free_width
+
+        def body(w, xs):
+            off, widx, slot, pm, and_ops, _, fops = xs
+            g = w[widx]  # one gather: [a | b | fa | fb] blocks
+            a, b = g[:ca], g[ca:2 * ca]  # (Ca, I, 4)
+            fa, fb = g[2 * ca:2 * ca + cf], g[2 * ca + cf:]  # (Cf, I, 4)
+            # pad slots gather a clamped table row; the pad tail absorbs
+            # it (INV/pad free lanes read the zero dummy row)
+            tgte = tabT[slot]  # (Ca, 2, I, 4)
+            if self.impl == "jit":
+                # hash only the AND block, in planar form; free lanes are
+                # one vector XOR (INV passes through via b == 0)
+                tw = self._lanes(slot.astype(U32))
+                and_out = _packed(
+                    HG.eval_and_planar(_planar(a), _planar(b),
+                                       _planar(tgte[:, 0]),
+                                       _planar(tgte[:, 1]), tw), ca, I)
+                free_out = fa ^ fb
+            else:
+                and_out, free_out = self._fused_eval(
+                    and_ops, a, b, tgte[:, 0], tgte[:, 1], slot, fops,
+                    fa, fb)
+            out = jnp.concatenate([and_out, free_out], 0)[pm]
+            return lax.dynamic_update_slice(w, out, (off, I32(0), I32(0))), \
+                None
+
+        wires, _ = lax.scan(body, wires, self._xs)
+        return wires[self._outs].transpose(1, 0, 2)
+
+    def evaluate(self, active, tables) -> jnp.ndarray:
+        self.n_eval_calls += 1
+        return self._eval(jnp.asarray(active), jnp.asarray(tables))
+
+    # ------------------------------------------------------------------
+    # garble
+    # ------------------------------------------------------------------
+    def _garble_fn(self, src_labels: jnp.ndarray, r: jnp.ndarray,
+                   *, keep_wires: bool = False):
+        """src_labels (I, n_src, 4) fresh zero-labels; r (I, 4) offset.
+
+        Returns (input_zero at source order, tables (I, max(nAND,1), 2, 4),
+        output color bits (I, n_out)[, full wire-zero store]).
+        """
+        self.n_traces += 1
+        I, nA = self.instances, self.plan.n_and
+        ca = self.plan.and_width
+        r = r.astype(U32)
+        rp = tuple(jnp.broadcast_to(r[None, :, k], (ca, I)).reshape(-1)
+                   for k in range(4))  # planar R, AND-block shaped
+        wires = jnp.zeros((self.plan.n_rows, I, 4), U32)
+        wires = lax.dynamic_update_slice(
+            wires, src_labels.astype(U32).transpose(1, 0, 2),
+            (I32(0), I32(0), I32(0)))
+
+        cf = self.plan.free_width
+
+        def body(w, xs):
+            off, widx, slot, pm, and_ops, finv, fops = xs
+            g = w[widx]
+            a, b = g[:ca], g[ca:2 * ca]
+            fa, fb = g[2 * ca:2 * ca + cf], g[2 * ca + cf:]
+            if self.impl == "jit":
+                tw = self._lanes(slot.astype(U32))
+                c0, tg, te = HG.garble_and_planar(_planar(a), _planar(b),
+                                                  rp, tw)
+                and_out = _packed(c0, ca, I)
+                tg = _packed(tg, ca, I)
+                te = _packed(te, ca, I)
+                # free: XOR lanes a0^b0; INV lanes a0^R (b reads zero)
+                free_out = fa ^ fb
+                free_out = jnp.where(finv[:, None, None] != 0,
+                                     free_out ^ r[None], free_out)
+            else:
+                and_out, free_out, tg, te = self._fused_garble(
+                    and_ops, a, b, slot, r, fops, fa, fb)
+            out = jnp.concatenate([and_out, free_out], 0)[pm]
+            w = lax.dynamic_update_slice(w, out, (off, I32(0), I32(0)))
+            # tables leave through the scan's stacked ys (always written
+            # in place) rather than a second carry, which would break the
+            # wire store's buffer aliasing
+            return w, jnp.stack([tg, te], 1)
+
+        wires, tab = lax.scan(body, wires, self._xs)
+        in_zero = wires[: self.n_src].transpose(1, 0, 2)
+        out_perm = (wires[self._outs, :, 0] & U32(1)).T
+        # chunk-major (K, Ca) table stack -> dense AND-slot order
+        tables = (jnp.transpose(
+            tab.reshape(-1, 2, I, 4)[self._and_rows], (2, 0, 1, 3)) if nA
+            else jnp.zeros((I, 1, 2, 4), U32))
+        if keep_wires:
+            return (in_zero, tables, out_perm,
+                    wires[self._wire_rows].transpose(1, 0, 2))
+        return in_zero, tables, out_perm
+
+    def garble(self, src_labels, r, *, keep_wires: bool = False):
+        self.n_garble_calls += 1
+        return self._garble(jnp.asarray(src_labels), jnp.asarray(r),
+                            keep_wires=keep_wires)
+
+
+def get_executor(net: Netlist, instances: int, impl: str) -> LevelExecutor:
+    """Compiled-walk cache: one executor per (netlist, instances, impl).
+
+    The plan (and thus the cache) hangs off the netlist object, so its
+    lifetime matches the protocol's netlist cache and the jit executables
+    are reused across every preprocess/run that touches the same shape.
+    Small batches get the latency-regime plan (wider chunks, fewer scan
+    steps); large batches the tight throughput plan.
+    """
+    plan = compile_level_plan(net, instances=instances)
+    key = (int(instances), impl)
+    exe = plan._executors.get(key)
+    if exe is None:
+        exe = LevelExecutor(plan, instances, impl)
+        plan._executors[key] = exe
+    return exe

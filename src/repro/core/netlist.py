@@ -9,12 +9,13 @@ Gates are stored in topological order (the builder emits them that way).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 OP_XOR, OP_AND, OP_INV = 0, 1, 2
-OP_NAMES = {OP_XOR: "XOR", OP_AND: "AND", OP_INV: "INV"}
+OP_PAD = 3  # padding lane in a compiled level plan (reads/writes dummies)
+OP_NAMES = {OP_XOR: "XOR", OP_AND: "AND", OP_INV: "INV", OP_PAD: "PAD"}
 
 
 @dataclass
@@ -115,6 +116,275 @@ class Netlist:
             else:
                 w[:, out[g]] = a ^ 1
         return w[:, self.outputs]
+
+
+# ---------------------------------------------------------------------------
+# compiled level plan (device-resident execution)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LevelPlan:
+    """Device-ready execution plan for a netlist.
+
+    Gates are list-scheduled (respecting wire dependencies) into
+    ``n_chunks`` fixed-shape *chunks*, each holding up to ``and_width``
+    AND lanes and ``free_width`` XOR/INV lanes — the level schedule
+    bucketed to two padded widths, so ONE scan body covers the whole
+    netlist and the executable contains a single level shape regardless
+    of depth. Spare lanes read the zero *dummy* row (``n_rows - 1``).
+
+    Wires are renumbered into executor *rows*: sources (inputs +
+    constants) occupy rows ``[0, n_src)`` in ascending-wire order, and
+    gate outputs are packed **compactly** — chunk ``k``'s valid outputs
+    start at ``base[k]`` (AND lanes first, then free lanes) and
+    ``base[k+1] = base[k] + valid_k``, so the wire store holds exactly
+    ``n_src + n_gates`` live rows however much lane padding the chunk
+    shape carries. The executor still commits one full fixed-width block
+    per chunk — a SINGLE ``dynamic_update_slice`` of the computed lanes
+    permuted by ``perm`` so valid lanes come first (one dynamic write per
+    scan step is what lets XLA alias the carry in place; a second one
+    forces a full-store copy every chunk). The pad-lane tail clobbers
+    rows of *later* chunks, which is safe because chunk ``m`` only ever
+    reads rows below ``base[m]`` — every clobbered row is rewritten
+    before use. A ``stride``-row scratch tail plus the dummy row absorb
+    the last chunk's spill.
+
+    INV lanes are encoded as XOR-with-dummy: their second input reads the
+    zero row, so the evaluator needs no per-lane select at all (INV labels
+    pass through; the garbler XORs R on lanes flagged in ``free_inv``).
+
+    ``and_slot`` holds the dense garbled-table index per AND lane (also
+    the Half-Gate tweak, matching the host oracle bit-for-bit);
+    ``and_rows`` maps dense slot -> chunk-major table-store row
+    (``chunk * and_width + lane``) for the garbler.
+    """
+
+    num_wires: int
+    n_and: int
+    n_gates: int
+    n_levels: int  # natural (unconstrained) levelization depth
+    n_chunks: int
+    and_width: int
+    free_width: int
+    n_rows: int  # wire-store rows: n_src + n_gates + stride scratch + dummy
+    base: np.ndarray  # (K,) first output row of each chunk
+    and_valid: np.ndarray  # (K,) live AND lanes per chunk
+    free_valid: np.ndarray  # (K,) live free lanes per chunk
+    and_in0: np.ndarray  # (K, Ca) row ids (pad -> dummy)
+    and_in1: np.ndarray
+    and_slot: np.ndarray  # (K, Ca) dense table slot (pad -> n_and)
+    free_in0: np.ndarray  # (K, Cf) row ids (pad -> dummy)
+    free_in1: np.ndarray  # (K, Cf) row ids (INV and pad -> dummy)
+    free_inv: np.ndarray  # (K, Cf) uint32 1 on INV lanes (garbler XORs R)
+    free_ops: np.ndarray  # (K, Cf) uint32 XOR/INV/PAD (fused-kernel path)
+    perm: np.ndarray  # (K, Ca+Cf) write order: valid AND, valid free, pads
+    source_ids: np.ndarray  # (n_src,) original wire ids, ascending
+    out_rows: np.ndarray  # (n_out,) rows of the netlist outputs
+    wire_rows: np.ndarray  # (W,) original wire -> row
+    and_rows: np.ndarray  # (nA,) dense slot -> garble table-store row
+    _executors: Dict = field(default_factory=dict)  # (I, impl) -> executor
+
+    @property
+    def widths(self) -> Tuple[int, int]:
+        return (self.and_width, self.free_width)
+
+    @property
+    def padded_gate_lanes(self) -> int:
+        """Total kernel lanes including padding (wasted-work metric)."""
+        return self.n_chunks * (self.and_width + self.free_width)
+
+    @property
+    def padded_and_lanes(self) -> int:
+        return self.n_chunks * self.and_width
+
+    def source_positions(self, wire_ids) -> np.ndarray:
+        """Positions of ``wire_ids`` inside the ``source_ids`` ordering."""
+        pos = np.searchsorted(self.source_ids, wire_ids)
+        if len(wire_ids) and (
+            pos.max(initial=0) >= len(self.source_ids)
+            or not np.array_equal(self.source_ids[pos], np.asarray(wire_ids))
+        ):
+            raise KeyError("wire ids are not source wires of this netlist")
+        return pos.astype(np.int64)
+
+
+def _ceil8(n: int) -> int:
+    return max(8, -(-n // 8) * 8)
+
+
+def _chunk_widths(net: Netlist, depth: int,
+                  instances: Optional[int] = None) -> Tuple[int, int]:
+    """Bucket the level profile to one AND width and one free width.
+
+    Two regimes, selected by the executor batch size:
+
+    * **throughput** (default / large batches): widths sized just above
+      the average per-level population. The compact row numbering makes
+      lane padding cheap (pad lanes read the cache-hot dummy row and
+      clobber rows that are rewritten anyway), so the only real cost of
+      slack is gather/store volume — keep the widths tight and let wide
+      levels spill into extra chunks.
+    * **latency** (``instances`` <= 8, e.g. a single online request):
+      per-chunk volume is negligible, the scan's fixed per-chunk cost
+      dominates — widen ~4x so the chunk count approaches the natural
+      levelization depth.
+    """
+    depth = max(depth, 1)
+    n_and = net.and_count
+    n_free = net.num_gates - n_and
+    # AND lanes floor to /8 (hash + table traffic: keep tight, spill
+    # instead); free lanes ceil to /8 of the per-level average
+    ca = min(max((n_and // depth) // 8 * 8, 8), 1024)
+    cf = min(_ceil8(-(-n_free // depth)), 4096)
+    if instances is not None and instances <= 8:
+        ca = min(4 * ca, 1024)
+        cf = min(4 * cf, 4096)
+    return ca, cf
+
+
+def compile_level_plan(net: Netlist,
+                       and_width: Optional[int] = None,
+                       free_width: Optional[int] = None,
+                       instances: Optional[int] = None) -> LevelPlan:
+    """Compile (and cache on the netlist, per width config) a level plan.
+
+    ``instances`` only steers the default width choice (latency vs
+    throughput regime); explicit ``and_width``/``free_width`` win. Plans
+    are cached per (and_width, free_width) — source ordering, dense table
+    slots and output order are width-independent, so any plan of the same
+    netlist is interchangeable for packing/encoding purposes.
+    """
+    W, nA, G = net.num_wires, net.and_count, net.num_gates
+    depth = getattr(net, "_plan_depth", None)
+    if depth is None:
+        depth = len(net.levels())
+        net._plan_depth = depth  # type: ignore[attr-defined]
+    ca, cf = _chunk_widths(net, depth, instances)
+    ca = and_width or ca
+    cf = free_width or cf
+    plans = getattr(net, "_level_plans", None)
+    if plans is None:
+        plans = net._level_plans = {}  # type: ignore[attr-defined]
+    cached = plans.get((ca, cf))
+    if cached is not None:
+        return cached
+
+    op, in0, in1, out = net.op, net.in0, net.in1, net.out
+    # greedy list scheduling under per-class lane capacity: every gate
+    # lands in the earliest chunk after all its inputs with a spare lane
+    wire_chunk = np.full(W, -1, np.int64)
+    fill_and: List[int] = []
+    fill_free: List[int] = []
+    chunk_of = np.empty(G, np.int64)
+    lane_of = np.empty(G, np.int64)
+    for g in range(G):
+        e = wire_chunk[in0[g]] + 1
+        if op[g] != OP_INV:
+            e = max(e, wire_chunk[in1[g]] + 1)
+        is_and = op[g] == OP_AND
+        fill, cap = (fill_and, ca) if is_and else (fill_free, cf)
+        c = e
+        while c < len(fill) and fill[c] >= cap:
+            c += 1
+        while c >= len(fill):
+            fill_and.append(0)
+            fill_free.append(0)
+        lane_of[g] = fill[c]
+        fill[c] += 1
+        chunk_of[g] = c
+        wire_chunk[out[g]] = c
+
+    K = max(len(fill_and), 1)
+    stride = ca + cf
+    and_valid = np.zeros(K, np.int64)
+    and_valid[: len(fill_and)] = fill_and
+    free_valid = np.zeros(K, np.int64)
+    free_valid[: len(fill_free)] = fill_free
+
+    src = np.ones(W, bool)
+    src[out] = False
+    source_ids = np.nonzero(src)[0].astype(np.int64)
+    n_src = len(source_ids)
+    # compact numbering: exactly one live row per gate + scratch tail
+    base = n_src + np.concatenate(
+        [[0], np.cumsum(and_valid + free_valid)[:-1]])
+    n_rows = n_src + G + stride + 1
+    dummy = n_rows - 1
+
+    wire_rows = np.full(W, dummy, np.int64)
+    wire_rows[source_ids] = np.arange(n_src)
+    is_and_g = op == OP_AND
+    wire_rows[out] = np.where(
+        is_and_g,
+        base[chunk_of] + lane_of,
+        base[chunk_of] + and_valid[chunk_of] + lane_of,
+    )
+
+    and_in0 = np.full((K, ca), dummy, np.int64)
+    and_in1 = np.full((K, ca), dummy, np.int64)
+    and_slot = np.full((K, ca), nA, np.int64)
+    free_in0 = np.full((K, cf), dummy, np.int64)
+    free_in1 = np.full((K, cf), dummy, np.int64)
+    free_inv = np.zeros((K, cf), np.uint32)
+    free_ops = np.full((K, cf), OP_PAD, np.uint32)
+
+    and_idx = net.and_gate_index()
+    r0 = wire_rows[in0]
+    r1 = np.where(op == OP_INV, dummy, wire_rows[in1])  # INV: b reads zero
+    ag = np.nonzero(is_and_g)[0]
+    and_in0[chunk_of[ag], lane_of[ag]] = r0[ag]
+    and_in1[chunk_of[ag], lane_of[ag]] = wire_rows[in1[ag]]
+    and_slot[chunk_of[ag], lane_of[ag]] = and_idx[ag]
+    fg = np.nonzero(~is_and_g)[0]
+    free_in0[chunk_of[fg], lane_of[fg]] = r0[fg]
+    free_in1[chunk_of[fg], lane_of[fg]] = r1[fg]
+    free_inv[chunk_of[fg], lane_of[fg]] = (op[fg] == OP_INV).astype(np.uint32)
+    free_ops[chunk_of[fg], lane_of[fg]] = op[fg]
+
+    # dense table slot -> garbler table-store row (chunk-major AND lanes)
+    and_rows = np.empty(max(nA, 0), np.int64)
+    if nA:
+        and_rows[and_idx[ag]] = chunk_of[ag] * ca + lane_of[ag]
+
+    # write permutation over concat([AND lanes, free lanes]): valid lanes
+    # first (so the block lands compactly at base[k]), pads trailing
+    perm = np.empty((K, stride), np.int64)
+    for k in range(K):
+        va_k, vf_k = and_valid[k], free_valid[k]
+        pads = np.concatenate(
+            [np.arange(va_k, ca), ca + np.arange(vf_k, cf)])
+        perm[k] = np.concatenate(
+            [np.arange(va_k), ca + np.arange(vf_k), pads])
+
+    plan = LevelPlan(
+        num_wires=W,
+        n_and=nA,
+        n_gates=G,
+        n_levels=depth,
+        n_chunks=K,
+        and_width=ca,
+        free_width=cf,
+        n_rows=n_rows,
+        base=base,
+        and_valid=and_valid,
+        free_valid=free_valid,
+        and_in0=and_in0,
+        and_in1=and_in1,
+        and_slot=and_slot,
+        free_in0=free_in0,
+        free_in1=free_in1,
+        free_inv=free_inv,
+        free_ops=free_ops,
+        perm=perm,
+        source_ids=source_ids,
+        out_rows=wire_rows[np.asarray(net.outputs, np.int64)]
+        if len(net.outputs) else np.array([], np.int64),
+        wire_rows=wire_rows,
+        and_rows=and_rows,
+    )
+    plans[(ca, cf)] = plan
+    return plan
 
 
 def wire_fanout(net: Netlist) -> np.ndarray:

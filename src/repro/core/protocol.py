@@ -434,17 +434,19 @@ class PiTProtocol:
                 e_bits = np.concatenate(
                     [e_bits, _bits_of(rv, k, 1 << k)], axis=1
                 )
-            e_zero = jnp.stack(
-                [gcirc.input_zero[int(w)] for w in net.evaluator_inputs], axis=1
-            )
+            e_zero = G.input_zeros(gcirc, net.evaluator_inputs)
             e_lab = ot_labels(st.channel_online, e_zero, gcirc.r[:, None, :],
                               e_bits, tag=f"ot:{net.name}")
-            active = {int(w): g_lab[:, j] for j, w in enumerate(net.garbler_inputs)}
-            active.update(
-                {int(w): e_lab[:, j] for j, w in enumerate(net.evaluator_inputs)}
-            )
-            active.update(G.const_labels(gcirc))
-            out_lab = G.evaluate(net, gcirc.tables, active, impl=self.impl)
+            # packed active labels: one (wire_ids, (I, n, 4)) pair straight
+            # into the device executor — no per-wire host-side dict work
+            cw, c_lab = G.const_wires_labels(gcirc)
+            wire_ids = np.concatenate([
+                np.asarray(net.garbler_inputs, np.int64),
+                np.asarray(net.evaluator_inputs, np.int64), cw])
+            labels = jnp.concatenate(
+                [g_lab, e_lab, c_lab], axis=1)
+            out_lab = G.evaluate(net, gcirc.tables, (wire_ids, labels),
+                                 impl=self.impl)
             out_bits = G.decode_outputs(gcirc, out_lab)
             server_share = _words_from_bits(out_bits, k, self.t)
         return corr.masks, server_share  # client share = r (masks)

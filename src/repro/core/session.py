@@ -277,6 +277,11 @@ def compile(model, pcfg: Optional[PrivacyConfig] = None,
     just ``seq_len``. ``pcfg`` defaults to the model's privacy config; the
     session gets its own protocol instance so its phase ledgers start
     clean and bundles never alias the model's eager state.
+
+    ``impl`` defaults to ``"auto"`` — the device-resident GC executor
+    (:mod:`repro.core.gc_exec`), NOT the model's eager impl: serving is
+    the production path and must never drop to the per-level numpy walk.
+    Pass ``impl="ref"`` explicitly to pin a session to the host oracle.
     """
     if shape is None:
         raise ValueError("compile needs the request bucket shape (S, d)")
@@ -291,5 +296,5 @@ def compile(model, pcfg: Optional[PrivacyConfig] = None,
     return PiTSession(
         plan, model.weights, pcfg,
         seed=seed if seed is not None else 0,
-        impl=impl or model.p.impl,
+        impl=impl or "auto",
     )

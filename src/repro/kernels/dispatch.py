@@ -1,0 +1,36 @@
+"""Single resolver for the ``impl`` flag used across all GC/HE kernels.
+
+Historically each dispatch wrapper resolved ``"auto"`` on its own and they
+disagreed: ``halfgate.ops`` mapped ``auto`` -> Pallas on TPU while
+``core.garble`` treated ``auto`` as the host-side numpy loop. This module
+is now the one place that decides, so ``auto`` means the same thing
+everywhere: *the device-resident path* — the fused Pallas kernels on TPU,
+the jitted jnp implementation elsewhere.
+
+Resolved values:
+
+  "ref"              host/numpy oracle where one exists (``core.garble``),
+                     plain jnp in the kernel wrappers
+  "jit"              device-resident jnp (identical math to "ref", but the
+                     caller keeps the whole walk inside one ``jax.jit``)
+  "pallas"           fused Pallas TPU kernels
+  "pallas_interpret" Pallas kernels in interpreter mode (CPU testing)
+
+Kernel wrappers treat "jit" and "ref" identically (their jnp reference *is*
+the jit-able path); the distinction matters one level up, in
+``core.garble``, where "ref" selects the per-level numpy oracle and
+everything else the device-resident executor.
+"""
+
+from __future__ import annotations
+
+import jax
+
+DEVICE_IMPLS = ("jit", "pallas", "pallas_interpret")
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    """Map ``auto`` to the device-resident impl for the current backend."""
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jit"
+    return impl

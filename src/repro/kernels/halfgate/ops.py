@@ -1,23 +1,24 @@
 """Dispatch wrapper: Pallas on TPU, jnp reference elsewhere.
 
-``impl``: "auto" | "ref" | "pallas" | "pallas_interpret".
+``impl``: "auto" | "ref" | "jit" | "pallas" | "pallas_interpret", resolved
+through the shared :func:`repro.kernels.dispatch.resolve_impl` ("jit" and
+"ref" both mean the jnp path here — it is the jit-able implementation).
 The interpret path executes the kernel body in Python on CPU — used by the
 test-suite shape/dtype sweeps to validate the kernel against the oracle.
 """
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_impl
 from repro.kernels.halfgate import ref as _ref
 from repro.kernels.halfgate import halfgate as _pk
 
 
 def _resolve(impl: str) -> str:
-    if impl == "auto":
-        return "pallas" if jax.default_backend() == "tpu" else "ref"
-    return impl
+    impl = resolve_impl(impl)
+    return "ref" if impl == "jit" else impl
 
 
 def hash_labels(labels, tweaks):

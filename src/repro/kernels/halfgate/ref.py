@@ -102,3 +102,85 @@ def eval_and_gates(a, b, tg, te, tweaks):
     wg = ha ^ (tg & sa)
     we = hb ^ ((te ^ a) & sb)
     return wg ^ we
+
+
+# ---------------------------------------------------------------------------
+# planar variants: labels as four (N,) word planes instead of (N, 4)
+#
+# Bit-identical to the packed forms above, but every op runs on a
+# contiguous vector, which is what XLA:CPU needs to vectorize the ARX
+# rounds — inside the device executor's scan the packed (N, 4) form
+# lowers to strided scalar code ~50x slower. The executor transposes its
+# gathered label blocks once and feeds these.
+# ---------------------------------------------------------------------------
+
+
+def arx_perm_planar(v0, v1, v2, v3):
+    for r in range(NUM_ROUNDS):
+        v0 = v0 + v1 + U32(_RC[r])
+        v1 = _rotl(v1, 13) ^ v0
+        v2 = v2 + v3
+        v3 = _rotl(v3, 16) ^ v2
+        v0 = v0 + v3
+        v3 = _rotl(v3, 21) ^ v0
+        v2 = v2 + v1
+        v1 = _rotl(v1, 17) ^ v2
+    return v0, v1, v2, v3
+
+
+def hash_labels_planar(x, tweaks):
+    """x: 4-tuple of (N,) planes; tweaks (N,). Returns a 4-tuple."""
+    t = tweaks.astype(U32)
+    i = (x[0] ^ t, x[1] ^ (t ^ U32(0x9E3779B9)), x[2] ^ ~t,
+         x[3] ^ (t + U32(0x85EBCA6B)))
+    o = arx_perm_planar(*i)
+    return tuple(o[k] ^ i[k] for k in range(4))
+
+
+def eval_and_planar(a, b, tg, te, tweaks):
+    """Half-Gate evaluation on planar labels (4-tuples of (N,) planes).
+
+    The two hash calls are batched into one 2N-lane pass: fewer, longer
+    vector loops is what the executor's per-level scan body wants.
+    """
+    n = a[0].shape[0]
+    t1 = tweaks * U32(2)
+    h = hash_labels_planar(
+        tuple(jnp.concatenate([a[k], b[k]]) for k in range(4)),
+        jnp.concatenate([t1, t1 + U32(1)]))
+    ha = tuple(h[k][:n] for k in range(4))
+    hb = tuple(h[k][n:] for k in range(4))
+    sa = -(a[0] & U32(1))
+    sb = -(b[0] & U32(1))
+    return tuple(
+        (ha[k] ^ (tg[k] & sa)) ^ (hb[k] ^ ((te[k] ^ a[k]) & sb))
+        for k in range(4)
+    )
+
+
+def garble_and_planar(a0, b0, r, tweaks):
+    """Half-Gate garbling on planar labels. Returns (c0, tg, te) tuples.
+
+    All four hash calls are batched into one 4N-lane pass.
+    """
+    n = a0[0].shape[0]
+    t1 = tweaks * U32(2)
+    t2 = t1 + U32(1)
+    a1 = tuple(a0[k] ^ r[k] for k in range(4))
+    b1 = tuple(b0[k] ^ r[k] for k in range(4))
+    h = hash_labels_planar(
+        tuple(jnp.concatenate([a0[k], a1[k], b0[k], b1[k]])
+              for k in range(4)),
+        jnp.concatenate([t1, t1, t2, t2]))
+    ha0 = tuple(h[k][:n] for k in range(4))
+    ha1 = tuple(h[k][n:2 * n] for k in range(4))
+    hb0 = tuple(h[k][2 * n:3 * n] for k in range(4))
+    hb1 = tuple(h[k][3 * n:] for k in range(4))
+    pa = -(a0[0] & U32(1))
+    pb = -(b0[0] & U32(1))
+    tg = tuple(ha0[k] ^ ha1[k] ^ (r[k] & pb) for k in range(4))
+    te = tuple(hb0[k] ^ hb1[k] ^ a0[k] for k in range(4))
+    wg = tuple(ha0[k] ^ (tg[k] & pa) for k in range(4))
+    we = tuple(hb0[k] ^ ((te[k] ^ a0[k]) & pb) for k in range(4))
+    c0 = tuple(wg[k] ^ we[k] for k in range(4))
+    return c0, tg, te

@@ -2,17 +2,16 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
+from repro.kernels.dispatch import resolve_impl
 from repro.kernels.label_select import ref as _ref
 from repro.kernels.label_select.label_select import select_labels_pallas
 
 
 def select_labels(zero_labels, r, bits, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
+    impl = resolve_impl(impl)
+    if impl in ("ref", "jit"):
         return _ref.select_labels(zero_labels, r, bits)
     lead = zero_labels.shape[:-1]
     rb = jnp.broadcast_to(r, (*lead, 4)).reshape(-1, 4)

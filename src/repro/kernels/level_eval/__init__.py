@@ -1,3 +1,3 @@
-from repro.kernels.level_eval.ops import eval_level
+from repro.kernels.level_eval.ops import eval_level, garble_level
 
-__all__ = ["eval_level"]
+__all__ = ["eval_level", "garble_level"]

@@ -35,6 +35,18 @@ def _kernel(ops_ref, a_ref, b_ref, tg_ref, te_ref, tw_ref, out_ref):
     )
 
 
+def _garble_kernel(ops_ref, a_ref, b_ref, r_ref, tw_ref,
+                   c_ref, tg_ref, te_ref):
+    ops = ops_ref[...][:, 0]
+    tw = tw_ref[...][:, 0]
+    c0, tg, te = ref.garble_level(
+        ops, a_ref[...], b_ref[...], r_ref[...], tw
+    )
+    c_ref[...] = c0
+    tg_ref[...] = tg
+    te_ref[...] = te
+
+
 def _pad(x, block):
     g = x.shape[0]
     p = (-g) % block
@@ -65,3 +77,35 @@ def eval_level_pallas(ops, a, b, tg, te, tweaks, *, block=DEFAULT_BLOCK,
         interpret=interpret,
     )(opsp, ap, bp, tgp, tep, twp)
     return out[:g]
+
+
+@functools.partial(jax.jit, static_argnames=("block", "interpret"))
+def garble_level_pallas(ops, a0, b0, r, tweaks, *, block=DEFAULT_BLOCK,
+                        interpret=False):
+    """Garbler lane: ops (G,); a0/b0/r (G,4); tweaks (G,).
+
+    Returns (c0, tg, te), each (G,4) uint32 — the fused FreeXOR / INV /
+    Half-Gate garbling pass over one padded level.
+    """
+    g = a0.shape[0]
+    blk = min(block, max(8, 1 << (g - 1).bit_length()))
+    opsp = _pad(ops.reshape(-1, 1).astype(U32), blk)
+    ap, bp = _pad(a0, blk), _pad(b0, blk)
+    rp = _pad(r, blk)
+    twp = _pad(tweaks.reshape(-1, 1).astype(U32), blk)
+    gp = ap.shape[0]
+    lab = lambda: pl.BlockSpec((blk, 4), lambda i: (i, 0))
+    col = lambda: pl.BlockSpec((blk, 1), lambda i: (i, 0))
+    c0, tg, te = pl.pallas_call(
+        _garble_kernel,
+        grid=(gp // blk,),
+        in_specs=[col(), lab(), lab(), lab(), col()],
+        out_specs=(lab(), lab(), lab()),
+        out_shape=(
+            jax.ShapeDtypeStruct((gp, 4), U32),
+            jax.ShapeDtypeStruct((gp, 4), U32),
+            jax.ShapeDtypeStruct((gp, 4), U32),
+        ),
+        interpret=interpret,
+    )(opsp, ap, bp, rp, twp)
+    return c0[:g], tg[:g], te[:g]

@@ -1,17 +1,32 @@
-"""Dispatch wrapper for the fused level evaluator."""
+"""Dispatch wrapper for the fused level evaluator / garbler.
+
+``impl`` resolution goes through :func:`repro.kernels.dispatch.resolve_impl`
+so ``auto`` means the same thing here as in every other kernel wrapper and
+in ``core.garble``. ``"ref"`` and ``"jit"`` both select the jnp oracle —
+that *is* the jit-able path; the distinction only matters one level up.
+"""
 
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import resolve_impl
 from repro.kernels.level_eval import ref as _ref
-from repro.kernels.level_eval.level_eval import eval_level_pallas
+from repro.kernels.level_eval.level_eval import (
+    eval_level_pallas,
+    garble_level_pallas,
+)
 
 
 def eval_level(ops, a, b, tg, te, tweaks, impl: str = "auto"):
-    if impl == "auto":
-        impl = "pallas" if jax.default_backend() == "tpu" else "ref"
-    if impl == "ref":
+    impl = resolve_impl(impl)
+    if impl in ("ref", "jit"):
         return _ref.eval_level(ops, a, b, tg, te, tweaks)
     return eval_level_pallas(ops, a, b, tg, te, tweaks,
                              interpret=(impl == "pallas_interpret"))
+
+
+def garble_level(ops, a0, b0, r, tweaks, impl: str = "auto"):
+    impl = resolve_impl(impl)
+    if impl in ("ref", "jit"):
+        return _ref.garble_level(ops, a0, b0, r, tweaks)
+    return garble_level_pallas(ops, a0, b0, r, tweaks,
+                               interpret=(impl == "pallas_interpret"))

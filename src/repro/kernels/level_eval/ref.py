@@ -1,13 +1,18 @@
-"""jnp oracle: evaluate one topological netlist level in a single pass.
+"""jnp oracle: garble/evaluate one topological netlist level in one pass.
 
-Per gate (op ∈ {0:XOR, 1:AND, 2:INV}):
+Per gate (op ∈ {0:XOR, 1:AND, 2:INV, 3:PAD}):
     XOR -> a ^ b              (FreeXOR)
     AND -> HalfGate(a, b, tables, tweak)
     INV -> a                  (label passes through; semantics flip
                                garbler-side)
+    PAD -> 0                  (padding lane of a compiled level plan;
+                               reads/writes the plan's dummy wire)
 Computing the Half-Gate for every lane and masking is branch-free — the
 right shape for the VPU (the paper's PE co-issues Half-Gate and FreeXOR
-units; a SIMD machine evaluates both and selects).
+units; a SIMD machine evaluates both and selects). The garble lane
+mirrors this for the garbler side: FreeXOR / INV-offset / Half-Gate table
+generation in one fused pass, with tg/te masked to zero off the AND lanes
+so padded scatters stay deterministic.
 """
 
 from __future__ import annotations
@@ -25,5 +30,29 @@ def eval_level(ops, a, b, tg, te, tweaks):
     xor_out = a ^ b
     is_and = (ops == U32(1))[:, None]
     is_inv = (ops == U32(2))[:, None]
+    is_pad = (ops >= U32(3))[:, None]
     out = jnp.where(is_and, and_out, xor_out)
-    return jnp.where(is_inv, a, out)
+    out = jnp.where(is_inv, a, out)
+    return jnp.where(is_pad, U32(0), out)
+
+
+def garble_level(ops, a0, b0, r, tweaks):
+    """Garbler-side fused level pass.
+
+    ops (G,) uint32; a0/b0/r (G, 4) zero-labels and FreeXOR offset;
+    tweaks (G,). Returns (c0, tg, te), each (G, 4): the output zero-label
+    plus the two Half-Gate table rows (zero off the AND lanes).
+    """
+    c_and, tg, te = HG.garble_and_gates(a0, b0, r, tweaks)
+    is_and = (ops == U32(1))[:, None]
+    is_inv = (ops == U32(2))[:, None]
+    is_pad = (ops >= U32(3))[:, None]
+    c0 = jnp.where(is_and, c_and, a0 ^ b0)
+    c0 = jnp.where(is_inv, a0 ^ r, c0)
+    c0 = jnp.where(is_pad, U32(0), c0)
+    zero = jnp.zeros_like(tg)
+    return (
+        c0,
+        jnp.where(is_and, tg, zero),
+        jnp.where(is_and, te, zero),
+    )

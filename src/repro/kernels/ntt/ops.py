@@ -9,16 +9,15 @@ jnp/uint64 reference handles the ~30-bit primes BFV-lite uses on CPU.
 
 from __future__ import annotations
 
-import jax
-
+from repro.kernels.dispatch import resolve_impl
 from repro.kernels.ntt import ref as _ref
 
 
 def _resolve(impl: str, q: int) -> str:
-    if impl == "auto":
-        if jax.default_backend() == "tpu" and q < (1 << 15):
-            return "pallas"
-        return "ref"
+    auto = impl == "auto"
+    impl = resolve_impl(impl)
+    if impl == "jit" or (auto and q >= (1 << 15)):
+        return "ref"  # large-prime products overflow int32 VPU lanes
     return impl
 
 

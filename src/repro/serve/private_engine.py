@@ -45,17 +45,20 @@ class PrivateRequest:
 class PrivateServeEngine:
     def __init__(self, model, *, buckets: Sequence[int] = (),
                  pool_target: int = 2, auto_refill: bool = False,
-                 num_cores: int = 16):
+                 num_cores: int = 16, impl: Optional[str] = None):
         """``model``: a ``PrivateTransformer`` (server-owned weights).
 
         ``buckets`` pre-compiles sessions for those sequence lengths;
         other lengths compile lazily on first sight. ``pool_target`` is
-        the per-bucket bundle level ``maintain`` refills to.
+        the per-bucket bundle level ``maintain`` refills to. ``impl``
+        defaults to ``"auto"``: every bucket's garble/evaluate runs on
+        the device-resident GC executor, never the per-level numpy walk.
         """
         self.model = model
         self.pool_target = pool_target
         self.auto_refill = auto_refill
         self.num_cores = num_cores
+        self.impl = impl
         self._sessions: Dict[int, PiTSession] = {}
         self._pools: Dict[int, Deque[PreprocessedBundle]] = {}
         self._locks: Dict[int, threading.Lock] = {}
@@ -70,7 +73,8 @@ class PrivateServeEngine:
         with self._meta:
             if seq_len not in self._sessions:
                 self._sessions[seq_len] = compile(
-                    self.model, shape=(seq_len, self.model.d), seed=seq_len)
+                    self.model, shape=(seq_len, self.model.d), seed=seq_len,
+                    impl=self.impl)
                 self._pools[seq_len] = deque()
                 self._locks[seq_len] = threading.Lock()
             return self._sessions[seq_len]
