@@ -8,6 +8,11 @@
   fig10  — bench_sched          (scheduling/speculation/accelerator)
   fig11b — bench_energy         (system energy HAAC vs APINT)
   kernels / roofline            (unit costs, dry-run roofline table)
+  gc_eval — bench_gc_eval       (device GC executor vs numpy loop; smoke
+                                 here, full sweep writes BENCH_gc_eval.json)
+  net    — bench_net            (two-party runtime: transports, ledger
+                                 parity, pipelined refill; full run writes
+                                 BENCH_net.json)
 """
 
 from __future__ import annotations
@@ -30,6 +35,8 @@ def main() -> None:
         bench_sched,
         bench_energy,
         bench_roofline,
+        bench_gc_eval,
+        bench_net,
     )
 
     suites = [
@@ -41,6 +48,8 @@ def main() -> None:
         ("fig10", bench_sched),
         ("fig11b", bench_energy),
         ("roofline", bench_roofline),
+        ("gc_eval", bench_gc_eval),
+        ("net", bench_net),
     ]
     failed = []
     for name, mod in suites:

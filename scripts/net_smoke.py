@@ -1,0 +1,84 @@
+"""CI smoke: GarblerEndpoint ↔ EvaluatorEndpoint end-to-end over loopback
+TCP on a tiny model, with a hard timeout so a deadlocked socket fails the
+build fast instead of hanging the runner.
+
+    PYTHONPATH=src python scripts/net_smoke.py [--timeout 180]
+"""
+
+import argparse
+import signal
+import sys
+import time
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--timeout", type=int, default=180,
+                    help="hard wall-clock limit (SIGALRM) in seconds")
+    args = ap.parse_args()
+
+    def die(signum, frame):
+        print(f"FAIL: net smoke exceeded {args.timeout}s — deadlocked "
+              f"socket or runaway exchange", flush=True)
+        sys.stdout.flush()
+        import os
+
+        os._exit(2)
+
+    signal.signal(signal.SIGALRM, die)
+    signal.alarm(args.timeout)
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    import numpy as np
+
+    from repro.config import PrivacyConfig
+    from repro.core.engine import PrivateTransformer, random_weights
+    from repro.net import GarblerEndpoint, PitNetServer, TcpListener, \
+        TcpTransport
+
+    D, HEADS, DFF, S = 8, 2, 16, 4
+    rng = np.random.default_rng(0)
+    weights = random_weights(rng, D, DFF, 1)
+    pcfg = PrivacyConfig(he_poly_n=256, he_num_primes=3, he_t_bits=40,
+                         frac_bits=6)
+    model = PrivateTransformer(pcfg, D, HEADS, DFF, weights, seed=0)
+
+    t0 = time.perf_counter()
+    srv = PitNetServer(model, S, impl="ref")
+    lst = TcpListener()
+    th = srv.serve_tcp(lst, accept_timeout=30, timeout=120)
+    cli = GarblerEndpoint(TcpTransport.connect("127.0.0.1", lst.port),
+                          seed=7, impl="ref", timeout=120)
+    th.join(timeout=30)
+
+    cli.preprocess(1)
+    x = rng.normal(0, 1, (S, D))
+    y = cli.run(x)
+
+    sess = model.compile_session(S, impl="ref")
+    y_ref = sess.run(x, sess.preprocess(1)[0])
+    assert np.array_equal(y, y_ref), "wire output != in-process session"
+    led = cli.shared.ledger
+    st = sess.stats
+    assert led.offline.by_tag == dict(st.channel_offline.by_tag), \
+        "offline wire ledger != metered oracle"
+    assert led.online.by_tag == dict(st.channel_online.by_tag), \
+        "online wire ledger != metered oracle"
+    err = float(np.abs(y - model.forward_float(x)).max())
+    assert err < 0.25, f"accuracy drifted: {err}"
+
+    cli.close()
+    lst.close()
+    print(f"net smoke OK in {time.perf_counter() - t0:.1f}s: loopback-TCP "
+          f"output bit-identical, ledger == oracle "
+          f"({led.offline.total / 1e6:.1f} MB offline / "
+          f"{led.online.total / 1e6:.2f} MB online), max|err|={err:.4f}",
+          flush=True)
+    signal.alarm(0)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

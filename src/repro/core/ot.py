@@ -4,6 +4,11 @@ Honest-but-curious simulation: both endpoints live in-process, but every
 protocol message is metered so the benchmarks reproduce the paper's
 communication columns. Cost model follows IKNP OT extension [11]: κ=128
 bits per extended OT plus the chosen 128-bit label.
+
+The byte constants and :func:`choose_labels` are shared with the real
+two-party runtime (:mod:`repro.net`), which frames OT batches on the wire
+at exactly the metered sizes — the in-process meter is the oracle the net
+layer's ledger is asserted against.
 """
 
 from __future__ import annotations
@@ -44,20 +49,38 @@ class Channel:
         return self.total * 8 / bandwidth_bps + rounds * latency_s
 
 
+OT_MSG_BYTES = 16  # receiver's per-transfer IKNP column message
 OT_BYTES_PER_TRANSFER = 2 * 16 + 16  # IKNP: 2 masked labels + correction
 
 
-def ot_labels(channel: Channel, zero_labels, r, choice_bits, tag="ot"):
-    """Evaluator obtains labels for its choice bits; garbler learns nothing.
+def ot_request_bytes(n: int) -> int:
+    """Bytes of the receiver's choice-derived messages for ``n`` OTs."""
+    return n * OT_MSG_BYTES
+
+
+def ot_response_bytes(n: int) -> int:
+    """Bytes of the sender's masked label pairs for ``n`` OTs."""
+    return n * OT_BYTES_PER_TRANSFER
+
+
+def choose_labels(zero_labels, r, choice_bits):
+    """The OT functionality itself: labels for the receiver's choice bits.
 
     zero_labels: (..., 4) uint32; r: broadcastable; choice_bits (...,).
+    Pure label algebra (no metering) — shared by the in-process simulation
+    and the garbler side of the wire runtime.
     """
     import jax.numpy as jnp
 
     from repro.core import labels as LB
 
-    n = int(np.prod(choice_bits.shape))
-    channel.c2s(n * 16, tag)  # receiver's OT messages
-    channel.s2c(n * OT_BYTES_PER_TRANSFER, tag)
     bits = jnp.asarray(choice_bits, jnp.uint32)
     return LB.maybe_xor(zero_labels, bits, r)
+
+
+def ot_labels(channel: Channel, zero_labels, r, choice_bits, tag="ot"):
+    """Evaluator obtains labels for its choice bits; garbler learns nothing."""
+    n = int(np.prod(choice_bits.shape))
+    channel.c2s(ot_request_bytes(n), tag)  # receiver's OT messages
+    channel.s2c(ot_response_bytes(n), tag)
+    return choose_labels(zero_labels, r, choice_bits)

@@ -107,6 +107,63 @@ class Plan:
         return [[names[i] for i in core] for core in assign]
 
 
+def plan_to_spec(plan: Plan) -> Dict[str, object]:
+    """Serialize a :class:`Plan` to plain JSON-safe data.
+
+    Plans are pure shape/scale programs — no weights, no protocol state —
+    so the two-party runtime (:mod:`repro.net`) ships them in the session
+    handshake and the evaluator reconstructs an identical walk with
+    :func:`plan_from_spec`.
+    """
+
+    def ref(r: RegRef) -> Dict[str, object]:
+        return {"reg": r.reg,
+                "cols": list(r.cols) if r.cols is not None else None,
+                "transpose": r.transpose}
+
+    return {
+        "seq_len": plan.seq_len, "d": plan.d, "heads": plan.heads,
+        "head_dim": plan.head_dim, "d_ff": plan.d_ff,
+        "n_layers": plan.n_layers, "activation": plan.activation,
+        "frac": plan.frac, "layernorm_offload": plan.layernorm_offload,
+        "output_reg": plan.output_reg,
+        "reg_shapes": {k: list(v) for k, v in plan.reg_shapes.items()},
+        "ops": [
+            {"kind": op.kind, "name": op.name,
+             "reads": [ref(r) for r in op.reads], "write": ref(op.write),
+             "shape": list(op.shape), "in_scale": op.in_scale,
+             "out_scale": op.out_scale, "attrs": dict(op.attrs)}
+            for op in plan.ops
+        ],
+    }
+
+
+def plan_from_spec(spec: Dict[str, object]) -> Plan:
+    """Inverse of :func:`plan_to_spec` (round-trips to an equal walk)."""
+
+    def ref(d) -> RegRef:
+        return RegRef(d["reg"],
+                      tuple(d["cols"]) if d["cols"] is not None else None,
+                      bool(d["transpose"]))
+
+    plan = Plan(
+        seq_len=int(spec["seq_len"]), d=int(spec["d"]),
+        heads=int(spec["heads"]), head_dim=int(spec["head_dim"]),
+        d_ff=int(spec["d_ff"]), n_layers=int(spec["n_layers"]),
+        activation=str(spec["activation"]), frac=int(spec["frac"]),
+        layernorm_offload=bool(spec["layernorm_offload"]),
+        output_reg=str(spec["output_reg"]),
+        reg_shapes={k: tuple(v) for k, v in spec["reg_shapes"].items()},
+    )
+    plan.ops = tuple(
+        OpSpec(o["kind"], o["name"], tuple(ref(r) for r in o["reads"]),
+               ref(o["write"]), tuple(o["shape"]), int(o["in_scale"]),
+               int(o["out_scale"]), dict(o["attrs"]))
+        for o in spec["ops"]
+    )
+    return plan
+
+
 def compile_plan(model, seq_len: int) -> Plan:
     """Trace ``model.forward_private`` (a ``PrivateTransformer``) at a fixed
     sequence length into a :class:`Plan`.

@@ -143,19 +143,28 @@ class Stats:
         }
 
 
-def _bits_of(vals: np.ndarray, k: int, t: int) -> np.ndarray:
-    """Share residues (I, n) mod t -> (I, n*k) LSB-first bits. k <= 62."""
+def bits_of(vals: np.ndarray, k: int, t: int) -> np.ndarray:
+    """Share residues (I, n) mod t -> (I, n*k) LSB-first bits. k <= 62.
+
+    Public: the two-party runtime (:mod:`repro.net`) packs its GC input
+    words with the exact same bit layout on both endpoints.
+    """
     v = np.asarray(vals, np.uint64)
     shifts = np.arange(k, dtype=np.uint64)
     out = ((v[..., None] >> shifts) & np.uint64(1)).astype(np.uint8)
     return out.reshape(*v.shape[:-1], v.shape[-1] * k)
 
 
-def _words_from_bits(bits: np.ndarray, k: int, t: int) -> np.ndarray:
+def words_from_bits(bits: np.ndarray, k: int, t: int) -> np.ndarray:
     b = bits.reshape(*bits.shape[:-1], bits.shape[-1] // k, k).astype(np.uint64)
     shifts = np.arange(k, dtype=np.uint64)
     vals = np.sum(b << shifts, axis=-1, dtype=np.uint64)
     return np.mod(vals, np.uint64(t))
+
+
+# back-compat aliases (pre-net internal names)
+_bits_of = bits_of
+_words_from_bits = words_from_bits
 
 
 # ---------------------------------------------------------------------------

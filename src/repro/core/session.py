@@ -42,6 +42,31 @@ class BundleExhausted(RuntimeError):
     """Raised when ``run`` is asked to reuse a consumed (or foreign) bundle."""
 
 
+def gc_net_for(protocol: PiTProtocol, op: OpSpec) -> Netlist:
+    """The cached netlist backing a GC-kind op.
+
+    Module-level because both :class:`PiTSession` and the two-party
+    endpoints (:mod:`repro.net.party`) must resolve *identical* netlists
+    from a plan — the circuit structure depends only on the privacy config
+    and the op's shapes/scales, never on weights, so two protocol
+    instances on two machines build the same gate DAG.
+    """
+    p = protocol
+    if op.kind == "trunc":
+        return p.trunc_net(op.in_scale)
+    if op.kind == "gc_apply":
+        circ = op.attrs["circuit"]
+        if circ == "softmax":
+            return p.softmax_net(op.attrs["row_len"], op.in_scale)
+        return p.activation_net(circ, op.in_scale)
+    if op.kind == "layernorm":
+        n = op.shape[1]
+        if p.pcfg.layernorm_offload:
+            return p.layernorm_reduced_net(n, op.in_scale)
+        return p.layernorm_full_net(n, op.in_scale)
+    raise ValueError(op.kind)
+
+
 @dataclass
 class PreprocessedBundle:
     """Offline material for exactly one online inference.
@@ -97,20 +122,7 @@ class PiTSession:
 
     def _gc_net(self, op: OpSpec) -> Netlist:
         """The cached netlist backing a GC-kind op."""
-        p = self.protocol
-        if op.kind == "trunc":
-            return p.trunc_net(op.in_scale)
-        if op.kind == "gc_apply":
-            circ = op.attrs["circuit"]
-            if circ == "softmax":
-                return p.softmax_net(op.attrs["row_len"], op.in_scale)
-            return p.activation_net(circ, op.in_scale)
-        if op.kind == "layernorm":
-            n = op.shape[1]
-            if p.pcfg.layernorm_offload:
-                return p.layernorm_reduced_net(n, op.in_scale)
-            return p.layernorm_full_net(n, op.in_scale)
-        raise ValueError(op.kind)
+        return gc_net_for(self.protocol, op)
 
     # ------------------------------------------------------------------
     # offline phase

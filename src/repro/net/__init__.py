@@ -1,0 +1,33 @@
+"""repro.net — a real two-party runtime for the PiT protocol.
+
+Turns the in-process, byte-metered simulation (``core/protocol.py`` +
+``core/ot.Channel``) into two endpoints talking over a pluggable
+transport:
+
+  ``net.wire``      versioned typed message codec (labels, garbled-table
+                    streams, HE ciphertexts, Beaver shares, OT batches)
+  ``net.transport`` Transport ABC + InProcPipe (threaded queues) +
+                    TcpTransport (length-prefixed framing, loopback or
+                    real sockets, optional LAN-model shaping)
+  ``net.party``     GarblerEndpoint / EvaluatorEndpoint: walk the compiled
+                    ``core/plan.py`` op-graph and execute each op's
+                    offline/online halves as actual message exchanges,
+                    asserting byte totals against the metered Channel
+                    (the in-process simulation is the oracle)
+"""
+
+from repro.net.transport import InProcPipe, TcpListener, TcpTransport, Transport
+from repro.net.wire import WIRE_VERSION, Msg, Seg, decode_frame, encode_msg
+from repro.net.party import (
+    EvaluatorEndpoint,
+    GarblerEndpoint,
+    NetProtocolError,
+    PitNetServer,
+)
+
+__all__ = [
+    "Transport", "InProcPipe", "TcpTransport", "TcpListener",
+    "WIRE_VERSION", "Msg", "Seg", "encode_msg", "decode_frame",
+    "GarblerEndpoint", "EvaluatorEndpoint", "PitNetServer",
+    "NetProtocolError",
+]

@@ -1,0 +1,1006 @@
+"""Two-party endpoints: the compiled plan walk as real message exchanges.
+
+Roles follow the repo's protocol convention (``core/protocol.py``): the
+**client owns the input and acts as garbler**; the **server owns the
+weights and acts as evaluator**. So in deployment terms:
+
+  :class:`GarblerEndpoint`    the client process — holds ``x``, garbles
+                              every netlist in the plan, drives
+                              ``preprocess``/``run`` requests
+  :class:`EvaluatorEndpoint`  the long-lived model server — holds the
+                              weights, evaluates circuits, deals triples
+
+Both endpoints walk the *same* compiled :class:`~repro.core.plan.Plan`
+in lockstep (the server ships the plan spec in the handshake) and
+execute each op's offline/online halves as framed wire messages. Every
+protocol-metered message becomes a PROTO segment whose payload length is
+exactly what the in-process ``ot.Channel`` meters — the simulation is
+the byte oracle, and the per-tag :class:`WireLedger` can be asserted
+equal to a metered ``PiTSession`` transcript (``tests/test_net.py``).
+
+Fidelity boundary (documented, measured): the runtime is *share- and
+size-faithful*, not cryptographically hardened — it inherits the repo's
+honest-but-curious simulation level. Concretely: HE ciphertext frames
+are identity-encrypted blocks of the exact ciphertext wire size; OT
+frames carry the choice bits / chosen labels in correctly-sized IKNP
+blocks; and a small **sim sideband** (SIM frames, ledgered separately as
+overhead) carries what the oracle treats as implicit — GC decode
+metadata, the LayerNorm-offload centered share whose HE transfer the
+meter prepays offline, and the final output shares.
+
+Outputs are bit-identical to the in-process ``PiTSession.run`` path:
+every op's algebra is the same mod-t computation, and additive masks
+cancel under reconstruction regardless of which party drew them.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import traceback
+from collections import deque
+from dataclasses import asdict, dataclass, field
+from typing import Deque, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.config import PrivacyConfig
+from repro.core import garble as G
+from repro.core import ot as OT
+from repro.core import secret_sharing as SS
+from repro.core.netlist import Netlist
+from repro.core.ot import Channel
+from repro.core.plan import (
+    GC_KINDS,
+    OpSpec,
+    Plan,
+    RegRef,
+    compile_plan,
+    plan_from_spec,
+    plan_to_spec,
+)
+from repro.core.protocol import (
+    PiTProtocol,
+    _row_sum,
+    _row_sum_sq,
+    _rowwise_mul,
+    bits_of,
+    words_from_bits,
+)
+from repro.core.session import gc_net_for
+from repro.net import wire as W
+from repro.net.transport import Transport, TransportClosed
+
+
+class NetProtocolError(RuntimeError):
+    """Lockstep violation, peer error, or malformed exchange."""
+
+
+_bundle_ids = itertools.count(1)
+
+
+# ---------------------------------------------------------------------------
+# ledgers
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class WireLedger:
+    """Per-phase protocol byte ledger + overhead counters.
+
+    ``offline``/``online`` reuse :class:`~repro.core.ot.Channel`, keyed
+    by the same tags the in-process meter uses, so equality with the
+    oracle's ``Stats.channel_offline/online.by_tag`` is a direct dict
+    compare. ``sim_bytes``/``control_bytes`` are the sideband and
+    ``dir_flips`` counts wire direction alternations (real round
+    structure; the oracle's ``rounds`` counts meter calls).
+
+    One ledger is shared by all endpoints of a party — in the pipelined
+    mode the offline and online endpoints mutate it from two threads, so
+    every update happens under ``_mutex``.
+    """
+
+    offline: Channel = field(default_factory=Channel)
+    online: Channel = field(default_factory=Channel)
+    sim_bytes: int = 0
+    control_bytes: int = 0
+    frame_bytes: int = 0  # total frame bytes incl. headers, both ways
+    dir_flips: int = 0
+    _last_io: int = 0  # +1 sent, -1 received
+    _mutex: threading.Lock = field(default_factory=threading.Lock,
+                                   repr=False)
+
+    def _channel(self, phase: int) -> Channel:
+        if phase == W.PHASE_OFFLINE:
+            return self.offline
+        if phase == W.PHASE_ONLINE:
+            return self.online
+        raise NetProtocolError("PROTO frame without a phase")
+
+    def record_segs(self, phase: int, segs: Sequence[W.Seg]) -> None:
+        ch = self._channel(phase)
+        with self._mutex:
+            for s in segs:
+                if s.dir == W.DIR_C2S:
+                    ch.c2s(len(s.data), s.tag)
+                else:
+                    ch.s2c(len(s.data), s.tag)
+
+    def record_io(self, outgoing: bool, nbytes: int) -> None:
+        d = 1 if outgoing else -1
+        with self._mutex:
+            if self._last_io and d != self._last_io:
+                self.dir_flips += 1
+            self._last_io = d
+            self.frame_bytes += nbytes
+
+    def add_sim(self, nbytes: int) -> None:
+        with self._mutex:
+            self.sim_bytes += nbytes
+
+    def add_control(self, nbytes: int) -> None:
+        with self._mutex:
+            self.control_bytes += nbytes
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "offline_bytes": self.offline.total,
+            "online_bytes": self.online.total,
+            "sim_bytes": self.sim_bytes,
+            "control_bytes": self.control_bytes,
+            "frame_bytes": self.frame_bytes,
+            "dir_flips": self.dir_flips,
+            "offline_by_tag": dict(self.offline.by_tag),
+            "online_by_tag": dict(self.online.by_tag),
+        }
+
+
+def _gc_geom(net: Netlist, k: int) -> Tuple[int, int, int]:
+    """(n_out_words, xc_label_count, evaluator_label_count) of a netlist."""
+    n_out_bits = len(net.outputs)
+    xc_bits = len(net.garbler_inputs) - n_out_bits
+    return n_out_bits // k, xc_bits, len(net.evaluator_inputs)
+
+
+def _distinct_nets(protocol: PiTProtocol, plan: Plan
+                   ) -> Tuple[Dict[str, Netlist], Dict[str, int]]:
+    """Netlists in first-appearance order + per-request instance totals."""
+    nets: Dict[str, Netlist] = {}
+    per_req: Dict[str, int] = {}
+    for op in plan.ops:
+        if op.kind in GC_KINDS:
+            net = gc_net_for(protocol, op)
+            per_req[net.name] = per_req.get(net.name, 0) + plan.gc_instances(op)
+            nets.setdefault(net.name, net)
+    return nets, per_req
+
+
+def _read_reg(regs: Dict[str, np.ndarray], ref: RegRef) -> np.ndarray:
+    v = regs[ref.reg]
+    if ref.cols is not None:
+        v = v[:, ref.cols[0]: ref.cols[1]]
+    if ref.transpose:
+        v = v.T.copy()
+    return v
+
+
+def _write_reg(regs: Dict[str, np.ndarray], shapes, ref: RegRef,
+               val: np.ndarray) -> None:
+    if ref.cols is None:
+        regs[ref.reg] = val
+        return
+    if ref.reg not in regs:
+        regs[ref.reg] = np.zeros(shapes[ref.reg], np.uint64)
+    regs[ref.reg][:, ref.cols[0]: ref.cols[1]] = val
+
+
+# ---------------------------------------------------------------------------
+# endpoint base: framed send/recv with ledger + lockstep checks
+# ---------------------------------------------------------------------------
+
+
+class _Endpoint:
+    def __init__(self, transport: Transport, *, timeout: Optional[float],
+                 ledger: WireLedger):
+        self.transport = transport
+        self.timeout = timeout
+        self.ledger = ledger
+        self._seg_queue: Deque[Tuple[int, W.Seg]] = deque()
+
+    # -- send ----------------------------------------------------------
+    def _send_control(self, tag: str, payload=None) -> None:
+        frame = W.encode_msg(W.KIND_CONTROL, tag, payload)
+        self.ledger.add_control(len(frame))
+        self.ledger.record_io(True, len(frame))
+        self.transport.send(frame)
+
+    def _send_sim(self, tag: str, payload, phase: int) -> None:
+        frame = W.encode_msg(W.KIND_SIM, tag, payload, phase=phase)
+        self.ledger.add_sim(len(frame))
+        self.ledger.record_io(True, len(frame))
+        self.transport.send(frame)
+
+    def _send_segs(self, segs: Sequence[W.Seg], phase: int) -> None:
+        if not segs:
+            return
+        frame = W.encode_proto(segs, phase)
+        self.ledger.record_segs(phase, segs)
+        self.ledger.record_io(True, len(frame))
+        self.transport.send(frame)
+
+    # -- recv ----------------------------------------------------------
+    def _recv_frame(self) -> W.Msg:
+        frame = self.transport.recv(timeout=self.timeout)
+        msg = W.decode_frame(frame)
+        self.ledger.record_io(False, len(frame))
+        if msg.kind == W.KIND_PROTO:
+            self.ledger.record_segs(msg.phase, msg.segs)
+        elif msg.kind == W.KIND_SIM:
+            self.ledger.add_sim(len(frame))
+        else:
+            self.ledger.add_control(len(frame))
+            if msg.tag == "error":
+                raise NetProtocolError(f"peer error: {msg.payload}")
+        return msg
+
+    def _expect_seg(self, tag: str) -> bytes:
+        while not self._seg_queue:
+            msg = self._recv_frame()
+            if msg.kind != W.KIND_PROTO:
+                raise NetProtocolError(
+                    f"expected PROTO seg {tag!r}, got kind={msg.kind} "
+                    f"tag={msg.tag!r}")
+            self._seg_queue.extend((msg.phase, s) for s in msg.segs)
+        _, seg = self._seg_queue.popleft()
+        if seg.tag != tag:
+            raise NetProtocolError(
+                f"lockstep violation: expected seg {tag!r}, got {seg.tag!r}")
+        return seg.data
+
+    def _expect_msg(self, kind: int, tag: str):
+        if self._seg_queue:
+            pending = self._seg_queue[0][1].tag
+            raise NetProtocolError(
+                f"expected {tag!r} but PROTO seg {pending!r} is pending")
+        msg = self._recv_frame()
+        if msg.kind != kind or msg.tag != tag:
+            raise NetProtocolError(
+                f"lockstep violation: expected ({kind}, {tag!r}), got "
+                f"({msg.kind}, {msg.tag!r})")
+        return msg.payload
+
+    def close(self) -> None:
+        self.transport.close()
+
+
+# ---------------------------------------------------------------------------
+# server (evaluator) side
+# ---------------------------------------------------------------------------
+
+
+class ServerShared:
+    """Weight-owner state shared by all evaluator endpoints of a server
+    (the pipelined mode runs one endpoint per transport — a dedicated
+    offline pair and an online pair — over one bundle store)."""
+
+    def __init__(self, model, seq_len: int, *, impl: str = "ref",
+                 seed: int = 104729):
+        self.model = model
+        self.impl = impl
+        self.plan = compile_plan(model, seq_len)
+        self.protocol = PiTProtocol(model.p.pcfg, seed=seed, impl=impl)
+        self.rng = np.random.default_rng(seed)
+        self.rng_lock = threading.Lock()
+        self.lock = threading.Lock()  # bundle store
+        self.bundles: Dict[int, Dict[str, dict]] = {}
+        self.ledger = WireLedger()
+        self._quantized: Dict[str, tuple] = {}
+        self._ln_cache: Dict[str, dict] = {}
+
+    # -- weight access (mirrors PiTSession) ----------------------------
+    def weight_mod(self, op: OpSpec) -> np.ndarray:
+        if op.name not in self._quantized:
+            Wt = self.model.weights[op.attrs["layer"]]
+            w = getattr(Wt, op.attrs["weight"])
+            scale = op.attrs.get("wscale", 1.0)
+            if scale != 1.0:
+                w = w * scale
+            self._quantized[op.name] = self.protocol.quantize_weight(w)
+        return self._quantized[op.name][1]
+
+    def ln_params(self, op: OpSpec) -> dict:
+        if op.name not in self._ln_cache:
+            p = self.protocol
+            Wt = self.model.weights[op.attrs["layer"]]
+            which = op.attrs["which"]
+            gamma = getattr(Wt, f"{which}_g")
+            beta = getattr(Wt, f"{which}_b")
+            f = p.frac
+            self._ln_cache[op.name] = {
+                "gq_mod": SS.encode_fx(np.asarray(gamma), f, p.t),
+                "bq_mod": SS.encode_fx(np.asarray(beta), f, p.t),
+                "gq_raw": np.round(np.asarray(gamma, np.float64) * (1 << f)
+                                   ).astype(np.int64),
+                "bq_raw": np.round(np.asarray(beta, np.float64) * (1 << f)
+                                   ).astype(np.int64),
+            }
+        return self._ln_cache[op.name]
+
+    def hello_payload(self) -> dict:
+        p = self.protocol
+        ln_gq = {
+            op.name: self.ln_params(op)["gq_mod"]
+            for op in self.plan.ops
+            if op.kind == "layernorm" and p.pcfg.layernorm_offload
+        }
+        return {
+            "version": W.WIRE_VERSION,
+            "plan": plan_to_spec(self.plan),
+            "pcfg": asdict(self.model.p.pcfg),
+            "ln_gq": ln_gq,
+        }
+
+
+class EvaluatorEndpoint(_Endpoint):
+    """Model-server endpoint: serves preprocess + run requests on one
+    transport. Spawn one per transport over a shared :class:`ServerShared`
+    for the pipelined offline/online split."""
+
+    def __init__(self, transport: Transport, *, model=None,
+                 seq_len: Optional[int] = None,
+                 shared: Optional[ServerShared] = None, impl: str = "ref",
+                 timeout: Optional[float] = None):
+        if shared is None:
+            if model is None or seq_len is None:
+                raise ValueError("need model+seq_len or a ServerShared")
+            shared = ServerShared(model, seq_len, impl=impl)
+        super().__init__(transport, timeout=timeout, ledger=shared.ledger)
+        self.shared = shared
+
+    # ------------------------------------------------------------------
+    def serve_forever(self) -> None:
+        """Handle requests until the peer says bye / closes the transport.
+
+        Errors are reported to the peer as a CONTROL ``error`` frame and
+        re-raised (the endpoint thread dies loudly — a deadlocked or
+        diverged session must never hang silently)."""
+        while True:
+            try:
+                msg = self._recv_frame()
+            except TransportClosed:
+                return
+            try:
+                if msg.kind != W.KIND_CONTROL:
+                    raise NetProtocolError(
+                        f"expected a CONTROL frame, got kind={msg.kind}")
+                if msg.tag == "bye":
+                    return
+                if msg.tag == "hello":
+                    self._handle_hello(msg.payload)
+                elif msg.tag == "prep":
+                    self._handle_prep(msg.payload)
+                elif msg.tag == "run":
+                    self._handle_run(msg.payload)
+                else:
+                    raise NetProtocolError(f"unknown request {msg.tag!r}")
+            except TransportClosed:
+                return
+            except Exception as e:  # report, then die loudly
+                try:
+                    self._send_control(
+                        "error", f"{type(e).__name__}: {e}\n"
+                                 f"{traceback.format_exc()}")
+                    # drain the peer's in-flight stream: closing a TCP
+                    # socket with unread data RSTs the connection, which
+                    # would discard the queued error frame before the
+                    # peer reads it; the peer stops sending (and closes)
+                    # once the error frame reaches it, bounding the loop
+                    while True:
+                        self.transport.recv(timeout=0.5)
+                except (TransportClosed, OSError):
+                    pass
+                # close so a peer blocked mid-send fails fast
+                try:
+                    self.transport.close()
+                except OSError:
+                    pass
+                raise
+
+    # ------------------------------------------------------------------
+    def _handle_hello(self, payload) -> None:
+        if payload.get("version") != W.WIRE_VERSION:
+            raise NetProtocolError(
+                f"wire version mismatch: peer {payload.get('version')}, "
+                f"ours {W.WIRE_VERSION}")
+        self._send_control("hello-ok", self.shared.hello_payload())
+
+    # ------------------------------------------------------------------
+    # offline: receive the garbling stream, deal server-side material
+    # ------------------------------------------------------------------
+    def _handle_prep(self, payload) -> None:
+        sh = self.shared
+        p = sh.protocol
+        plan = sh.plan
+        t, k = p.t, p.k
+        n = int(payload["n"])
+        ids = [int(i) for i in payload["ids"]]
+        with sh.lock:
+            dup = sorted(set(ids) & set(sh.bundles))
+        if dup or len(set(ids)) != n:
+            # refuse rather than corrupt: a second client process reusing
+            # ids would silently swap tables under the first one's labels
+            # (multi-client id namespaces are a ROADMAP follow-up)
+            raise NetProtocolError(
+                f"bundle ids {dup or ids} already exist on this server")
+        nets, per_req = _distinct_nets(p, plan)
+
+        slabs: Dict[str, dict] = {}
+        for name, net in nets.items():
+            I_tot = per_req[name] * n
+            n_out, xc_bits, _ = _gc_geom(net, k)
+            tables = W.unpack_tables(self._expect_seg(f"tables:{name}"),
+                                     I_tot, net.and_count)
+            mlab = W.unpack_labels(self._expect_seg("g-labels"),
+                                   (I_tot, n_out * k))
+            meta = self._expect_msg(W.KIND_SIM, f"gc-meta:{name}")
+            slabs[name] = {
+                "tables": tables, "mlab": mlab,
+                "perm": np.asarray(meta["perm"], np.uint32),
+                "cw": np.asarray(meta["cw"], np.int64),
+                "clab": np.asarray(meta["clab"], np.uint32),
+                "off": 0,
+            }
+
+        resp: List[W.Seg] = []
+        new_bundles: Dict[int, Dict[str, dict]] = {}
+        for bid in ids:
+            parts: Dict[str, dict] = {}
+            for op in plan.ops:
+                if op.kind == "linear":
+                    x_shape = plan.read_shape(op.reads[0])
+                    r1 = W.ct_unpack(self._expect_seg("he-enc-r"), x_shape)
+                    Wmod = sh.weight_mod(op)
+                    wr = SS.matmul_mod(r1, Wmod.T, t)
+                    with sh.rng_lock:
+                        s_mask = sh.rng.integers(0, t, wr.shape,
+                                                 dtype=np.uint64)
+                    client_y = SS.sub_mod(wr, s_mask, t)
+                    resp.append(W.Seg("he-wr", W.DIR_S2C,
+                                      W.ct_pack(client_y, p._ct_bytes,
+                                                p.params.n)))
+                    parts[op.name] = {"s_mask": s_mask}
+                elif op.kind == "beaver_matmul":
+                    m, kk = plan.read_shape(op.reads[0])
+                    _, nn = plan.read_shape(op.reads[1])
+                    with sh.rng_lock:
+                        trip = SS.deal_matmul_triple(sh.rng, m, kk, nn, t)
+                    resp.append(W.Seg(
+                        "beaver", W.DIR_S2C,
+                        W.pack_u64(trip.a1) + W.pack_u64(trip.b1)
+                        + W.pack_u64(trip.c1)))
+                    parts[op.name] = {"a2": trip.a2, "b2": trip.b2,
+                                      "c2": trip.c2}
+                else:  # GC kinds
+                    I = plan.gc_instances(op)
+                    net = gc_net_for(p, op)
+                    slab = slabs[net.name]
+                    lo = slab["off"]
+                    slab["off"] = lo + I
+                    parts[op.name] = {
+                        "net": net,
+                        "tables": slab["tables"][lo: lo + I],
+                        "mlab": slab["mlab"][lo: lo + I],
+                        "perm": slab["perm"][lo: lo + I],
+                        "cw": slab["cw"],
+                        "clab": slab["clab"][lo: lo + I],
+                    }
+                    if op.kind == "layernorm" and p.pcfg.layernorm_offload:
+                        I_ln, nn = op.shape
+                        self._expect_seg("he-ln-r")
+                        self._expect_seg("he-enc-centered")
+                        with sh.rng_lock:
+                            parts[op.name]["he_mask"] = sh.rng.integers(
+                                0, t, I_ln, dtype=np.uint64)
+            new_bundles[bid] = parts
+        self._send_segs(resp, W.PHASE_OFFLINE)
+        with sh.lock:
+            sh.bundles.update(new_bundles)
+        self._send_control("prep-done", {"n": n, "ids": ids})
+
+    # ------------------------------------------------------------------
+    # online: one run against one bundle
+    # ------------------------------------------------------------------
+    def _handle_run(self, payload) -> None:
+        sh = self.shared
+        p = sh.protocol
+        plan = sh.plan
+        t = p.t
+        bid = int(payload["id"])
+        with sh.lock:
+            sparts = sh.bundles.pop(bid, None)
+        if sparts is None:
+            raise NetProtocolError(
+                f"bundle {bid} unknown or already consumed on the server")
+
+        S, d = plan.seq_len, plan.d
+        regs: Dict[str, np.ndarray] = {
+            "x": W.unpack_u64(self._expect_seg("input-share"), (S, d))
+        }
+        for op in plan.ops:
+            part = sparts[op.name]
+            rd = [_read_reg(regs, ref) for ref in op.reads]
+            if op.kind == "linear":
+                xo_c = W.unpack_u64(self._expect_seg("x-minus-r"),
+                                    rd[0].shape)
+                x_open = SS.add_mod(xo_c, rd[0], t)
+                wx = SS.matmul_mod(x_open, sh.weight_mod(op).T, t)
+                out = SS.add_mod(wx, part["s_mask"], t)
+            elif op.kind == "beaver_matmul":
+                Es = SS.sub_mod(rd[0], part["a2"], t)
+                Fs = SS.sub_mod(rd[1], part["b2"], t)
+                self._send_segs([W.Seg("beaver-open", W.DIR_S2C,
+                                       W.pack_u64(Es) + W.pack_u64(Fs))],
+                                W.PHASE_ONLINE)
+                data = self._expect_seg("beaver-open")
+                Ec = W.unpack_u64(data[: Es.size * 8], Es.shape)
+                Fc = W.unpack_u64(data[Es.size * 8:], Fs.shape)
+                E = SS.add_mod(Ec, Es, t)
+                F = SS.add_mod(Fc, Fs, t)
+                out = SS.add_mod(
+                    SS.add_mod(part["c2"], SS.matmul_mod(E, part["b2"], t), t),
+                    SS.matmul_mod(part["a2"], F, t), t)
+            elif op.kind == "trunc":
+                flat = rd[0].reshape(-1, 1)
+                out = self._server_gc(part, flat, None).reshape(rd[0].shape)
+            elif op.kind == "gc_apply":
+                if op.attrs["circuit"] == "softmax":
+                    out = self._server_gc(part, rd[0], None)
+                else:
+                    flat = rd[0].reshape(-1, 1)
+                    out = self._server_gc(part, flat, None
+                                          ).reshape(rd[0].shape)
+            elif op.kind == "layernorm":
+                hs = rd[0]
+                for extra in rd[1:]:
+                    hs = SS.add_mod(hs, extra, t)
+                out = self._server_layernorm(op, part, hs)
+            else:
+                raise NetProtocolError(f"unknown op kind {op.kind!r}")
+            _write_reg(regs, plan.reg_shapes, op.write, out)
+
+        self._send_sim("reveal", {"s": regs[plan.output_reg]},
+                       W.PHASE_ONLINE)
+        self._send_control("run-done", {"id": bid})
+
+    # ------------------------------------------------------------------
+    def _server_gc(self, part: dict, xs: np.ndarray,
+                   raw_e: Optional[np.ndarray]) -> np.ndarray:
+        """Evaluator leg of one GC op: sim-OT request, receive labels,
+        evaluate, decode to this party's output share."""
+        import jax.numpy as jnp
+
+        sh = self.shared
+        p = sh.protocol
+        t, k = p.t, p.k
+        net: Netlist = part["net"]
+        n_out, xc_bits, n_e = _gc_geom(net, k)
+        I = xs.shape[0]
+
+        e_bits = bits_of(xs, k, t)
+        if raw_e is not None:
+            rv = np.mod(np.asarray(raw_e, np.int64), 1 << k).astype(np.uint64)
+            e_bits = np.concatenate([e_bits, bits_of(rv, k, 1 << k)], axis=1)
+        assert e_bits.shape == (I, n_e)
+        # sim-OT: the receiver's choice-derived messages (logical c2s in
+        # the oracle's ledger; see core/ot.ot_labels)
+        self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_C2S,
+                               W.pack_ot_request(e_bits))], W.PHASE_ONLINE)
+        g_lab = W.unpack_labels(self._expect_seg("g-labels"), (I, xc_bits))
+        e_lab = W.unpack_ot_response(self._expect_seg(f"ot:{net.name}"),
+                                     (I, n_e))
+        wire_ids = np.concatenate([
+            np.asarray(net.garbler_inputs, np.int64),
+            np.asarray(net.evaluator_inputs, np.int64), part["cw"]])
+        labels = np.concatenate([g_lab, part["mlab"], e_lab, part["clab"]],
+                                axis=1)
+        out_lab = G.evaluate(net, jnp.asarray(part["tables"]),
+                             (wire_ids, jnp.asarray(labels)), impl=sh.impl)
+        out_bits = ((np.asarray(out_lab)[..., 0] & 1) ^ part["perm"]
+                    ).astype(np.uint8)
+        return words_from_bits(out_bits, k, t)
+
+    def _server_layernorm(self, op: OpSpec, part: dict, hs: np.ndarray
+                          ) -> np.ndarray:
+        sh = self.shared
+        p = sh.protocol
+        t, f = p.t, p.frac
+        I, n = hs.shape
+        lp = sh.ln_params(op)
+        if not p.pcfg.layernorm_offload:
+            raw = np.concatenate([np.broadcast_to(lp["gq_raw"], (I, n)),
+                                  np.broadcast_to(lp["bq_raw"], (I, n))],
+                                 axis=1)
+            return self._server_gc(part, hs, raw)
+        # APINT Fig. 4 offload, evaluator legs (mirrors layernorm_online)
+        inv_n = int(round((1 << f) / n))
+        mu = SS.scalar_mul_mod(inv_n, _row_sum(hs, t), t)
+        cxs = SS.sub_mod(SS.scalar_mul_mod(1 << f, hs, t), mu[:, None], t)
+        cxc = np.asarray(self._expect_msg(W.KIND_SIM, "ln-centered"),
+                         np.uint64)
+        cross = np.array(
+            [int(np.dot(cxc[i].astype(object), cxs[i].astype(object)) % t)
+             for i in range(I)], dtype=np.uint64)
+        cross_c = SS.sub_mod(cross, part["he_mask"], t)
+        self._send_segs([W.Seg("he-cross", W.DIR_S2C,
+                               W.ct_pack_rows(cross_c, p._ct_bytes))],
+                        W.PHASE_ONLINE)
+        var_s = SS.add_mod(_row_sum_sq(cxs, t),
+                           SS.scalar_mul_mod(2, part["he_mask"], t), t)
+        var_s = SS.scalar_mul_mod(inv_n, var_s, t)
+        gxs = _rowwise_mul(lp["gq_mod"], cxs, t)
+        in_s = np.concatenate([gxs, var_s[:, None]], axis=1)
+        out = self._server_gc(part, in_s, None)
+        return SS.add_mod(out, np.broadcast_to(lp["bq_mod"], out.shape), t)
+
+
+# ---------------------------------------------------------------------------
+# client (garbler) side
+# ---------------------------------------------------------------------------
+
+
+class ClientShared:
+    """Input-owner state shared by a client's endpoints (offline + online
+    pairs in the pipelined mode): protocol, plan, and the bundle pool."""
+
+    def __init__(self, *, seed: int = 0, impl: str = "ref"):
+        self.seed = seed
+        self.impl = impl
+        self.protocol: Optional[PiTProtocol] = None
+        self.plan: Optional[Plan] = None
+        self.ln_gq: Dict[str, np.ndarray] = {}
+        self.rng = np.random.default_rng(seed)  # offline draws
+        self.run_rng = np.random.default_rng(seed + 1)  # input shares
+        self.lock = threading.Lock()  # pool + lazy init
+        self.bundles: Dict[int, Dict[str, dict]] = {}
+        self.order: Deque[int] = deque()
+        self.ledger = WireLedger()
+
+    def adopt_hello(self, payload: dict) -> None:
+        with self.lock:
+            if self.plan is not None:  # second endpoint of a pair
+                if plan_to_spec(self.plan) != payload["plan"]:
+                    raise NetProtocolError(
+                        "offline/online endpoints saw different plans")
+                return
+            pcfg = PrivacyConfig(**payload["pcfg"])
+            self.protocol = PiTProtocol(pcfg, seed=self.seed)
+            self.plan = plan_from_spec(payload["plan"])
+            self.ln_gq = {k: np.asarray(v, np.uint64)
+                          for k, v in payload["ln_gq"].items()}
+
+    def pool_size(self) -> int:
+        with self.lock:
+            return len(self.order)
+
+    def take_bundle_id(self) -> Optional[int]:
+        with self.lock:
+            return self.order.popleft() if self.order else None
+
+
+class GarblerEndpoint(_Endpoint):
+    """Client endpoint: connect, ``handshake()``, then ``preprocess(n)``
+    (offline: garble + stream) and ``run(x)`` (online only)."""
+
+    def __init__(self, transport: Transport, *,
+                 shared: Optional[ClientShared] = None, seed: int = 0,
+                 impl: str = "ref", timeout: Optional[float] = None):
+        shared = shared or ClientShared(seed=seed, impl=impl)
+        super().__init__(transport, timeout=timeout, ledger=shared.ledger)
+        self.shared = shared
+        self._lock = threading.Lock()  # one request at a time per endpoint
+
+    # ------------------------------------------------------------------
+    def handshake(self) -> Plan:
+        with self._lock:
+            self._send_control("hello", {"version": W.WIRE_VERSION})
+            self.shared.adopt_hello(self._expect_msg(W.KIND_CONTROL,
+                                                     "hello-ok"))
+        return self.shared.plan
+
+    def close(self) -> None:
+        try:
+            self._send_control("bye")
+        except TransportClosed:
+            pass
+        self.transport.close()
+
+    # ------------------------------------------------------------------
+    # offline
+    # ------------------------------------------------------------------
+    def preprocess(self, n: int = 1) -> List[int]:
+        """Garble every netlist in the plan (one batched call per distinct
+        netlist across all ``n`` bundles), stream tables/labels/HE frames
+        to the evaluator, and pool the client halves. Returns bundle ids."""
+        if n < 1:
+            raise ValueError("preprocess needs n >= 1")
+        sh = self.shared
+        if sh.plan is None:
+            self.handshake()
+        with self._lock:
+            return self._preprocess_locked(n)
+
+    def _preprocess_locked(self, n: int) -> List[int]:
+        sh = self.shared
+        p = sh.protocol
+        plan = sh.plan
+        t, k = p.t, p.k
+        ids = [next(_bundle_ids) for _ in range(n)]
+        self._send_control("prep", {"n": n, "ids": ids})
+
+        nets, per_req = _distinct_nets(p, plan)
+        slabs: Dict[str, tuple] = {}
+        for name, net in nets.items():
+            I_tot = per_req[name] * n
+            n_out, xc_bits, _ = _gc_geom(net, k)
+            gcirc = G.garble(net, p._next_key(), I_tot, impl=sh.impl)
+            masks = sh.rng.integers(0, t, (I_tot, n_out), dtype=np.uint64)
+            mask_enc = SS.sub_mod(np.zeros_like(masks), masks, t)
+            mlab = G.encode_inputs(gcirc, net.garbler_inputs[xc_bits:],
+                                   bits_of(mask_enc, k, t))
+            cw, clab = G.const_wires_labels(gcirc)
+            self._send_segs([
+                W.Seg(f"tables:{name}", W.DIR_C2S,
+                      W.pack_tables(gcirc.tables)),
+                W.Seg("g-labels", W.DIR_C2S, W.pack_labels(mlab)),
+            ], W.PHASE_OFFLINE)
+            self._send_sim(f"gc-meta:{name}", {
+                "perm": np.asarray(gcirc.output_perm),
+                "cw": np.asarray(cw), "clab": np.asarray(clab),
+            }, W.PHASE_OFFLINE)
+            slabs[name] = (gcirc, masks)
+
+        offsets = {name: 0 for name in nets}
+        new_bundles: Dict[int, Dict[str, dict]] = {}
+        for bid in ids:
+            parts: Dict[str, dict] = {}
+            segs: List[W.Seg] = []
+            for op in plan.ops:
+                if op.kind == "linear":
+                    x_shape = plan.read_shape(op.reads[0])
+                    r1 = sh.rng.integers(0, t, x_shape, dtype=np.uint64)
+                    segs.append(W.Seg("he-enc-r", W.DIR_C2S,
+                                      W.ct_pack(r1, p._ct_bytes, p.params.n)))
+                    parts[op.name] = {"r1": r1}
+                elif op.kind == "beaver_matmul":
+                    parts[op.name] = {}
+                else:  # GC kinds
+                    I = plan.gc_instances(op)
+                    net = gc_net_for(p, op)
+                    lo = offsets[net.name]
+                    offsets[net.name] = lo + I
+                    gcirc, masks = slabs[net.name]
+                    parts[op.name] = {
+                        "gc": G.slice_instances(gcirc, lo, lo + I),
+                        "masks": masks[lo: lo + I],
+                    }
+                    if op.kind == "layernorm" and p.pcfg.layernorm_offload:
+                        I_ln, nn = op.shape
+                        blocks = W.ct_blocks(I_ln * nn, p.params.n)
+                        segs.append(W.Seg("he-ln-r", W.DIR_C2S,
+                                          bytes(blocks * p._ct_bytes)))
+                        segs.append(W.Seg("he-enc-centered", W.DIR_C2S,
+                                          bytes(I_ln * p._ct_bytes)))
+            self._send_segs(segs, W.PHASE_OFFLINE)
+            new_bundles[bid] = parts
+
+        # server responses arrive in the same deterministic walk order
+        for bid in ids:
+            for op in plan.ops:
+                if op.kind == "linear":
+                    new_bundles[bid][op.name]["client_y"] = W.ct_unpack(
+                        self._expect_seg("he-wr"), op.shape)
+                elif op.kind == "beaver_matmul":
+                    m, kk = plan.read_shape(op.reads[0])
+                    _, nn = plan.read_shape(op.reads[1])
+                    data = self._expect_seg("beaver")
+                    o1, o2 = m * kk * 8, (m * kk + kk * nn) * 8
+                    new_bundles[bid][op.name] = {
+                        "a1": W.unpack_u64(data[:o1], (m, kk)),
+                        "b1": W.unpack_u64(data[o1:o2], (kk, nn)),
+                        "c1": W.unpack_u64(data[o2:], (m, nn)),
+                    }
+        self._expect_msg(W.KIND_CONTROL, "prep-done")
+        with sh.lock:
+            sh.bundles.update(new_bundles)
+            sh.order.extend(ids)
+        return ids
+
+    # ------------------------------------------------------------------
+    # online
+    # ------------------------------------------------------------------
+    def run(self, x: np.ndarray, bundle_id: Optional[int] = None
+            ) -> np.ndarray:
+        """Online phase for one request; consumes one pooled bundle."""
+        sh = self.shared
+        if sh.plan is None:
+            self.handshake()
+        plan = sh.plan
+        x = np.asarray(x, np.float64)
+        if x.shape != (plan.seq_len, plan.d):
+            raise ValueError(f"input shape {x.shape} != bucket shape "
+                             f"{(plan.seq_len, plan.d)}")
+        with self._lock:
+            if bundle_id is None:
+                bundle_id = sh.take_bundle_id()
+                if bundle_id is None:
+                    raise NetProtocolError(
+                        "no preprocessed bundle in the pool — call "
+                        "preprocess() first")
+            with sh.lock:
+                parts = sh.bundles.pop(bundle_id, None)
+            if parts is None:
+                raise NetProtocolError(
+                    f"bundle {bundle_id} unknown or already consumed")
+            return self._run_locked(x, bundle_id, parts)
+
+    def _run_locked(self, x, bundle_id: int, parts) -> np.ndarray:
+        sh = self.shared
+        p = sh.protocol
+        plan = sh.plan
+        t, f = p.t, p.frac
+        self._send_control("run", {"id": bundle_id})
+
+        enc = SS.encode_fx(x, f, t)
+        xc = sh.run_rng.integers(0, t, enc.shape, dtype=np.uint64)
+        xs = SS.sub_mod(enc, xc, t)
+        self._send_segs([W.Seg("input-share", W.DIR_C2S, W.pack_u64(xs))],
+                        W.PHASE_ONLINE)
+        regs: Dict[str, np.ndarray] = {"x": xc}
+        for op in plan.ops:
+            part = parts[op.name]
+            rd = [_read_reg(regs, ref) for ref in op.reads]
+            if op.kind == "linear":
+                xo = SS.sub_mod(rd[0], part["r1"], t)
+                self._send_segs([W.Seg("x-minus-r", W.DIR_C2S,
+                                       W.pack_u64(xo))], W.PHASE_ONLINE)
+                out = part["client_y"]
+            elif op.kind == "beaver_matmul":
+                Ec = SS.sub_mod(rd[0], part["a1"], t)
+                Fc = SS.sub_mod(rd[1], part["b1"], t)
+                self._send_segs([W.Seg("beaver-open", W.DIR_C2S,
+                                       W.pack_u64(Ec) + W.pack_u64(Fc))],
+                                W.PHASE_ONLINE)
+                data = self._expect_seg("beaver-open")
+                Es = W.unpack_u64(data[: Ec.size * 8], Ec.shape)
+                Fs = W.unpack_u64(data[Ec.size * 8:], Fc.shape)
+                E = SS.add_mod(Ec, Es, t)
+                F = SS.add_mod(Fc, Fs, t)
+                out = SS.add_mod(
+                    SS.add_mod(part["c1"],
+                               SS.matmul_mod(E, part["b1"], t), t),
+                    SS.add_mod(SS.matmul_mod(part["a1"], F, t),
+                               SS.matmul_mod(E, F, t), t), t)
+            elif op.kind == "trunc":
+                flat = rd[0].reshape(-1, 1)
+                out = self._client_gc(part, flat).reshape(rd[0].shape)
+            elif op.kind == "gc_apply":
+                if op.attrs["circuit"] == "softmax":
+                    out = self._client_gc(part, rd[0])
+                else:
+                    flat = rd[0].reshape(-1, 1)
+                    out = self._client_gc(part, flat).reshape(rd[0].shape)
+            elif op.kind == "layernorm":
+                hc = rd[0]
+                for extra in rd[1:]:
+                    hc = SS.add_mod(hc, extra, t)
+                out = self._client_layernorm(op, part, hc)
+            else:
+                raise NetProtocolError(f"unknown op kind {op.kind!r}")
+            _write_reg(regs, plan.reg_shapes, op.write, out)
+
+        xs_out = np.asarray(
+            self._expect_msg(W.KIND_SIM, "reveal")["s"], np.uint64)
+        self._expect_msg(W.KIND_CONTROL, "run-done")
+        v = SS.reconstruct(regs[plan.output_reg], xs_out, t)
+        return SS.decode_fx(v, f, t)
+
+    # ------------------------------------------------------------------
+    def _client_gc(self, part: dict, xc: np.ndarray) -> np.ndarray:
+        """Garbler leg of one GC op: send active labels for this party's
+        share, answer the sim-OT request, output share = the masks."""
+        sh = self.shared
+        p = sh.protocol
+        t, k = p.t, p.k
+        gcirc: G.GarbledCircuit = part["gc"]
+        net = gcirc.net
+        n_out, xc_bits, n_e = _gc_geom(net, k)
+        I = xc.shape[0]
+        g_lab = G.encode_inputs(gcirc, net.garbler_inputs[:xc_bits],
+                                bits_of(xc, k, t))
+        self._send_segs([W.Seg("g-labels", W.DIR_C2S, W.pack_labels(g_lab))],
+                        W.PHASE_ONLINE)
+        choice = W.unpack_ot_request(self._expect_seg(f"ot:{net.name}"),
+                                     (I, n_e))
+        e_zero = G.input_zeros(gcirc, net.evaluator_inputs)
+        e_lab = OT.choose_labels(e_zero, gcirc.r[:, None, :], choice)
+        self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_S2C,
+                               W.pack_ot_response(e_lab))], W.PHASE_ONLINE)
+        return part["masks"]
+
+    def _client_layernorm(self, op: OpSpec, part: dict, hc: np.ndarray
+                          ) -> np.ndarray:
+        sh = self.shared
+        p = sh.protocol
+        t, f = p.t, p.frac
+        I, n = hc.shape
+        if not p.pcfg.layernorm_offload:
+            return self._client_gc(part, hc)
+        inv_n = int(round((1 << f) / n))
+        mu = SS.scalar_mul_mod(inv_n, _row_sum(hc, t), t)
+        cxc = SS.sub_mod(SS.scalar_mul_mod(1 << f, hc, t), mu[:, None], t)
+        # sim sideband: the oracle prepays the centered-share ciphertext
+        # offline ("he-enc-centered"); the actual coefficients ride here
+        self._send_sim("ln-centered", cxc, W.PHASE_ONLINE)
+        cross_c = W.ct_unpack_rows(self._expect_seg("he-cross"), I,
+                                   p._ct_bytes)
+        var_c = SS.add_mod(_row_sum_sq(cxc, t),
+                           SS.scalar_mul_mod(2, cross_c, t), t)
+        var_c = SS.scalar_mul_mod(inv_n, var_c, t)
+        gxc = _rowwise_mul(sh.ln_gq[op.name], cxc, t)
+        in_c = np.concatenate([gxc, var_c[:, None]], axis=1)
+        return self._client_gc(part, in_c)
+
+
+# ---------------------------------------------------------------------------
+# pipelined server wrapper
+# ---------------------------------------------------------------------------
+
+
+class PitNetServer:
+    """Host a model behind N evaluator endpoints over one bundle store.
+
+    The pipelined deployment gives the offline phase its own endpoint
+    pair so ``refill_async`` traffic streams concurrently with online
+    ``run`` traffic (see ``serve.private_engine.NetPrivateServeEngine``).
+    """
+
+    def __init__(self, model, seq_len: int, *, impl: str = "ref",
+                 seed: int = 104729):
+        self.shared = ServerShared(model, seq_len, impl=impl, seed=seed)
+        self.endpoints: List[EvaluatorEndpoint] = []
+        self.threads: List[threading.Thread] = []
+
+    def serve_transport(self, transport: Transport, *,
+                        timeout: Optional[float] = None, name: str = ""
+                        ) -> threading.Thread:
+        ep = EvaluatorEndpoint(transport, shared=self.shared,
+                               timeout=timeout)
+        self.endpoints.append(ep)
+        th = threading.Thread(target=ep.serve_forever, daemon=True,
+                              name=name or f"pit-eval-{len(self.threads)}")
+        th.start()
+        self.threads.append(th)
+        return th
+
+    def serve_tcp(self, listener, *, accept_timeout: float = 30.0,
+                  timeout: Optional[float] = None, name: str = ""
+                  ) -> threading.Thread:
+        """Accept one connection on ``listener`` (in the background, so
+        the caller can connect concurrently — the TCP backlog holds the
+        race) and serve it. One call per endpoint pair member."""
+        def work():
+            self.serve_transport(listener.accept(timeout=accept_timeout),
+                                 timeout=timeout, name=name)
+
+        th = threading.Thread(target=work, daemon=True,
+                              name=(name or "pit-eval") + "-accept")
+        th.start()
+        return th
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for th in self.threads:
+            th.join(timeout=timeout)
+
+    def close(self) -> None:
+        for ep in self.endpoints:
+            ep.close()

@@ -1,0 +1,238 @@
+"""Pluggable byte transports for the two-party runtime.
+
+A :class:`Transport` moves whole frames (opaque byte strings) between two
+endpoints, full-duplex. Two implementations:
+
+* :class:`InProcPipe` — queue-backed, for same-process endpoints on two
+  threads. Zero syscalls; the default for tests and for measuring pure
+  protocol overhead.
+* :class:`TcpTransport` — length-prefixed framing over a socket
+  (loopback or real NICs), with :class:`TcpListener` for the serving
+  side. ``TCP_NODELAY`` is set: the runtime already batches per-op
+  messages, so Nagle only adds latency.
+
+Both support *LAN-model shaping* (``bandwidth_bps`` / ``latency_s``):
+each sent frame pays ``latency + bytes·8/bandwidth`` of sleep on the
+sender, replaying the paper's 9.6 Gb/s / 0.165 ms setting so measured
+wall-clock can be compared against the metered ``Channel.time_s``
+prediction.
+
+Every endpoint counts ``bytes_sent`` / ``bytes_recv`` (payload) and
+``frames_sent`` / ``frames_recv``; the framing overhead (u64 length
+prefixes) is ``8 * frames`` and reported by the benchmarks separately
+from protocol payload.
+"""
+
+from __future__ import annotations
+
+import queue
+import socket
+import struct
+import time
+from typing import Optional, Tuple
+
+
+class TransportClosed(ConnectionError):
+    """The peer closed the connection (or the recv timed out)."""
+
+
+class Transport:
+    """Frame transport base: counts traffic and applies LAN shaping."""
+
+    def __init__(self, *, bandwidth_bps: float = 0.0, latency_s: float = 0.0):
+        self.bandwidth_bps = float(bandwidth_bps)
+        self.latency_s = float(latency_s)
+        self.bytes_sent = 0
+        self.bytes_recv = 0
+        self.frames_sent = 0
+        self.frames_recv = 0
+
+    # -- shaping -------------------------------------------------------
+    def _shape(self, nbytes: int) -> None:
+        dt = self.latency_s
+        if self.bandwidth_bps > 0:
+            dt += nbytes * 8.0 / self.bandwidth_bps
+        if dt > 0:
+            time.sleep(dt)
+
+    # -- interface -----------------------------------------------------
+    def send(self, frame: bytes) -> None:
+        raise NotImplementedError
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# in-process pipe
+# ---------------------------------------------------------------------------
+
+
+_CLOSE = object()
+
+
+class InProcPipe(Transport):
+    """One end of a threaded, queue-backed duplex pipe.
+
+    ``recv_gate`` (optional :class:`threading.Event`) holds back frame
+    *delivery* on this end until set — benchmarks/tests use it to pin a
+    peer mid-exchange and prove that traffic on another transport keeps
+    flowing (the pipelined refill-vs-serve overlap).
+    """
+
+    def __init__(self, send_q: "queue.Queue", recv_q: "queue.Queue",
+                 **shaping):
+        super().__init__(**shaping)
+        self._send_q = send_q
+        self._recv_q = recv_q
+        self._closed = False
+        self.recv_gate = None
+
+    @classmethod
+    def make_pair(cls, **shaping) -> Tuple["InProcPipe", "InProcPipe"]:
+        """Two connected ends; shaping applies to both directions."""
+        a2b: "queue.Queue" = queue.Queue()
+        b2a: "queue.Queue" = queue.Queue()
+        return cls(a2b, b2a, **shaping), cls(b2a, a2b, **shaping)
+
+    def send(self, frame: bytes) -> None:
+        if self._closed:
+            raise TransportClosed("pipe closed")
+        self._shape(len(frame))
+        self.bytes_sent += len(frame)
+        self.frames_sent += 1
+        self._send_q.put(frame)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        if self.recv_gate is not None:
+            if not self.recv_gate.wait(timeout=timeout):
+                raise TransportClosed(
+                    f"recv gate not released within {timeout}s")
+        try:
+            frame = self._recv_q.get(timeout=timeout)
+        except queue.Empty:
+            raise TransportClosed(f"recv timed out after {timeout}s")
+        if frame is _CLOSE:
+            raise TransportClosed("peer closed the pipe")
+        self.bytes_recv += len(frame)
+        self.frames_recv += 1
+        return frame
+
+    def close(self) -> None:
+        if not self._closed:
+            self._closed = True
+            self._send_q.put(_CLOSE)
+
+
+# ---------------------------------------------------------------------------
+# TCP
+# ---------------------------------------------------------------------------
+
+# u64 length prefix: preprocess ships each netlist's garbled-table slab
+# for a whole bundle batch as one frame, which crosses 4 GiB at
+# production scale — a u32 prefix would fail only then, and only on TCP
+_LEN = struct.Struct("<Q")
+
+
+class TcpTransport(Transport):
+    """Length-prefixed frames over a connected socket."""
+
+    def __init__(self, sock: socket.socket, **shaping):
+        super().__init__(**shaping)
+        self._sock = sock
+        try:
+            sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        except OSError:
+            pass
+
+    @classmethod
+    def connect(cls, host: str, port: int, *, timeout: Optional[float] = 30.0,
+                **shaping) -> "TcpTransport":
+        sock = socket.create_connection((host, port), timeout=timeout)
+        sock.settimeout(None)
+        return cls(sock, **shaping)
+
+    def send(self, frame: bytes) -> None:
+        self._shape(len(frame))
+        try:
+            self._sock.sendall(_LEN.pack(len(frame)) + frame)
+        except OSError as e:
+            raise TransportClosed(f"send failed: {e}") from e
+        self.bytes_sent += len(frame)
+        self.frames_sent += 1
+
+    def _recv_exact(self, n: int) -> bytes:
+        chunks = []
+        while n:
+            try:
+                chunk = self._sock.recv(min(n, 1 << 20))
+            except socket.timeout:
+                raise TransportClosed("recv timed out")
+            except OSError as e:
+                raise TransportClosed(f"recv failed: {e}") from e
+            if not chunk:
+                raise TransportClosed("peer closed the socket")
+            chunks.append(chunk)
+            n -= len(chunk)
+        return b"".join(chunks)
+
+    def recv(self, timeout: Optional[float] = None) -> bytes:
+        self._sock.settimeout(timeout)
+        try:
+            (n,) = _LEN.unpack(self._recv_exact(_LEN.size))
+            frame = self._recv_exact(n)
+        finally:
+            self._sock.settimeout(None)
+        self.bytes_recv += len(frame)
+        self.frames_recv += 1
+        return frame
+
+    def close(self) -> None:
+        try:
+            self._sock.shutdown(socket.SHUT_RDWR)
+        except OSError:
+            pass
+        self._sock.close()
+
+
+class TcpListener:
+    """Serving-side acceptor: ``TcpListener() -> accept() -> TcpTransport``."""
+
+    def __init__(self, host: str = "127.0.0.1", port: int = 0,
+                 backlog: int = 4):
+        import threading
+
+        self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
+        self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
+        self._sock.bind((host, port))
+        self._sock.listen(backlog)
+        # serialize accepts: settimeout is socket-wide state, and callers
+        # (PitNetServer.serve_tcp) accept from several threads at once
+        self._accept_lock = threading.Lock()
+
+    @property
+    def address(self) -> Tuple[str, int]:
+        return self._sock.getsockname()[:2]
+
+    @property
+    def port(self) -> int:
+        return self.address[1]
+
+    def accept(self, timeout: Optional[float] = None, **shaping
+               ) -> TcpTransport:
+        with self._accept_lock:
+            self._sock.settimeout(timeout)
+            try:
+                sock, _ = self._sock.accept()
+            except socket.timeout:
+                raise TransportClosed(f"accept timed out after {timeout}s")
+            finally:
+                self._sock.settimeout(None)
+        sock.settimeout(None)
+        return TcpTransport(sock, **shaping)
+
+    def close(self) -> None:
+        self._sock.close()

@@ -22,8 +22,28 @@ import numpy as np
 
 from repro.core.netlist import Netlist, OP_AND, OP_INV, OP_XOR
 
-# cycle weights (the paper's PE latencies, evaluation)
-GATE_CYCLES = {OP_AND: 18, OP_XOR: 1, OP_INV: 1}
+# the paper's PE latencies; values must match accel/sim.py (which cannot
+# be imported here — accel.sim already imports repro.sched)
+HALFGATE_EVAL_CY = 18
+HALFGATE_GARBLE_CY = 21
+
+
+def gate_cycles(garbling: bool = False) -> Dict[int, int]:
+    """Per-op cycle weights for schedule costing.
+
+    Garbling pays 21 cy per Half-Gate AND (4 hash lanes) vs 18 cy for
+    evaluation (2 lanes) — a garble-side schedule costed with the eval
+    table underestimates every AND on the critical path by ~17%.
+    """
+    return {
+        OP_AND: HALFGATE_GARBLE_CY if garbling else HALFGATE_EVAL_CY,
+        OP_XOR: 1,
+        OP_INV: 1,
+    }
+
+
+# compatibility view: the evaluation-side table (pre-garbling-aware API)
+GATE_CYCLES = gate_cycles(garbling=False)
 
 
 def depth_first_order(net: Netlist) -> np.ndarray:
@@ -75,11 +95,14 @@ def _levelize_subset(net: Netlist, seg: np.ndarray) -> np.ndarray:
 # ---------------------------------------------------------------------------
 
 
-def _cpfe_priorities(net: Netlist, seg: np.ndarray) -> Dict[int, int]:
+def _cpfe_priorities(net: Netlist, seg: np.ndarray,
+                     cycles: Dict[int, int] = None) -> Dict[int, int]:
     """Recursive critical-path priorities within one segment.
 
-    Lower rank = scheduled first among operable gates.
+    Lower rank = scheduled first among operable gates. ``cycles`` is the
+    PE latency table (:func:`gate_cycles`); defaults to evaluation.
     """
+    cycles = cycles if cycles is not None else GATE_CYCLES
     seg = [int(g) for g in seg]
     seg_set = set(seg)
     prod = {int(net.out[g]): g for g in seg}
@@ -92,7 +115,7 @@ def _cpfe_priorities(net: Netlist, seg: np.ndarray) -> Dict[int, int]:
                 parents[g].append(p)
                 children[p].append(g)
 
-    weight = {g: GATE_CYCLES[int(net.op[g])] for g in seg}
+    weight = {g: cycles[int(net.op[g])] for g in seg}
     rank: Dict[int, int] = {}
     counter = [0]
 
@@ -151,21 +174,31 @@ def _cpfe_priorities(net: Netlist, seg: np.ndarray) -> Dict[int, int]:
     return rank
 
 
-def fine_grained_order(net: Netlist, seg_gates: int) -> np.ndarray:
-    """Segmentation + CPFE + cycle-accurate list scheduling (§3.3.2)."""
+def fine_grained_order(net: Netlist, seg_gates: int,
+                       garbling: bool = False) -> np.ndarray:
+    """Segmentation + CPFE + cycle-accurate list scheduling (§3.3.2).
+
+    ``garbling=True`` costs the schedule with the garble-side PE latency
+    (21 cy per AND, matching ``accel/sim.py``) so offline/preprocessing
+    schedules are priced correctly; the default is evaluation (18 cy).
+    """
+    cycles = gate_cycles(garbling)
     out = []
     for seg in _segments(net, seg_gates):
-        rank = _cpfe_priorities(net, seg)
-        order = _list_schedule(net, seg, rank)
+        rank = _cpfe_priorities(net, seg, cycles)
+        order = _list_schedule(net, seg, rank, cycles)
         out.append(order)
     return np.concatenate(out) if out else np.empty(0, np.int64)
 
 
-def _list_schedule(net: Netlist, seg: np.ndarray, rank: Dict[int, int]) -> np.ndarray:
+def _list_schedule(net: Netlist, seg: np.ndarray, rank: Dict[int, int],
+                   cycles: Dict[int, int] = None) -> np.ndarray:
     """Pick the operable gate with the best CPFE rank each issue slot,
-    modeling the PE latency: a gate's output is ready `GATE_CYCLES` after
+    modeling the PE latency: a gate's output is ready ``cycles[op]`` after
     issue; a gate is operable when both in-segment producers are done."""
     import heapq
+
+    cycles = cycles if cycles is not None else GATE_CYCLES
 
     seg = [int(g) for g in seg]
     prod = {int(net.out[g]): g for g in seg}
@@ -194,7 +227,7 @@ def _list_schedule(net: Netlist, seg: np.ndarray, rank: Dict[int, int]) -> np.nd
         if ready:
             _, g = heapq.heappop(ready)
             t += 1  # one issue slot per cycle
-            fin = t + GATE_CYCLES[int(net.op[g])]
+            fin = t + cycles[int(net.op[g])]
             heapq.heappush(pending, (fin, g))
             order.append(g)
         else:

@@ -1,6 +1,7 @@
 from repro.serve.engine import ServeEngine
 from repro.serve.private_engine import (
     BundlePoolEmpty,
+    NetPrivateServeEngine,
     PrivateRequest,
     PrivateServeEngine,
 )
@@ -8,6 +9,7 @@ from repro.serve.private_engine import (
 __all__ = [
     "ServeEngine",
     "PrivateServeEngine",
+    "NetPrivateServeEngine",
     "PrivateRequest",
     "BundlePoolEmpty",
 ]

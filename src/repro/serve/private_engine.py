@@ -170,3 +170,112 @@ class PrivateServeEngine:
     def schedule_info(self, seq_len: int) -> List[List[str]]:
         """Coarse-grained GC-op → accelerator-core assignment (§3.3.1)."""
         return self.session(seq_len).plan.coarse_schedule(self.num_cores)
+
+
+# ---------------------------------------------------------------------------
+# pipelined two-party serving (client side)
+# ---------------------------------------------------------------------------
+
+
+class NetPrivateServeEngine:
+    """Client-side serving engine over the two-party runtime, pipelined.
+
+    The in-process :class:`PrivateServeEngine` serializes refill and
+    serving within a bucket (one protocol object). This engine instead
+    gives the offline phase a **dedicated endpoint pair**: one
+    :class:`~repro.net.party.GarblerEndpoint` per transport, both backed
+    by one :class:`~repro.net.party.ClientShared` bundle pool. The server
+    side mirrors it with two ``EvaluatorEndpoint`` threads over one
+    ``ServerShared`` store (see :class:`~repro.net.party.PitNetServer`).
+
+    ``refill_async`` therefore streams garbled tables / HE frames /
+    triples on the offline pair while ``serve`` keeps answering requests
+    on the online pair — the ROADMAP PR-2 follow-up ("overlap bundle
+    refill with online serving by giving each phase its own protocol
+    endpoint").
+    """
+
+    def __init__(self, offline_transport, online_transport, *,
+                 pool_target: int = 2, seed: int = 0, impl: str = "ref",
+                 timeout: Optional[float] = None):
+        from repro.net.party import ClientShared, GarblerEndpoint
+
+        self.pool_target = pool_target
+        self._shared = ClientShared(seed=seed, impl=impl)
+        self.offline = GarblerEndpoint(offline_transport, shared=self._shared,
+                                       timeout=timeout)
+        self.online = GarblerEndpoint(online_transport, shared=self._shared,
+                                      timeout=timeout)
+        self.offline.handshake()
+        self.online.handshake()
+        self._refill_lock = threading.Lock()  # deficit computation
+
+    @property
+    def plan(self):
+        return self._shared.plan
+
+    @property
+    def ledger(self):
+        return self._shared.ledger
+
+    def pool_size(self) -> int:
+        return self._shared.pool_size()
+
+    # -- offline pair --------------------------------------------------
+    def preprocess(self, count: int) -> int:
+        with self._refill_lock:
+            self.offline.preprocess(count)
+        return self.pool_size()
+
+    def maintain(self) -> int:
+        """Top the pool back up to ``pool_target``.
+
+        The deficit is computed under the same lock every engine-driven
+        ``preprocess`` holds, so a maintain racing an explicit-count
+        refill cannot both see the low watermark and overshoot the
+        target (mirrors the in-process engine's bucket-lock rule)."""
+        with self._refill_lock:
+            deficit = self.pool_target - self.pool_size()
+            if deficit > 0:
+                self.offline.preprocess(deficit)
+            return self.pool_size()
+
+    def refill_async(self, count: Optional[int] = None) -> threading.Thread:
+        """Refill on a background thread over the *offline* endpoint —
+        online ``serve`` traffic keeps flowing on its own pair."""
+        def work():
+            if count is None:
+                self.maintain()
+            else:
+                self.preprocess(count)
+
+        th = threading.Thread(target=work, daemon=True, name="pit-net-refill")
+        th.start()
+        return th
+
+    # -- online pair ---------------------------------------------------
+    def serve(self, requests: List[PrivateRequest]) -> List[PrivateRequest]:
+        for r in requests:
+            bid = self._shared.take_bundle_id()
+            if bid is None:
+                raise BundlePoolEmpty(
+                    "no preprocessed bundle in the net pool (call "
+                    "preprocess/refill_async)")
+            try:
+                r.result = self.online.run(r.x, bundle_id=bid)
+            except Exception:
+                with self._shared.lock:
+                    if bid in self._shared.bundles:
+                        # e.g. bad request shape: rejected before any
+                        # wire traffic — the (expensive) bundle is still
+                        # fresh on both parties, return it to the pool
+                        self._shared.order.appendleft(bid)
+                raise
+        return requests
+
+    def run(self, x: np.ndarray) -> np.ndarray:
+        return self.serve([PrivateRequest(x=x)])[0].result
+
+    def close(self) -> None:
+        self.offline.close()
+        self.online.close()

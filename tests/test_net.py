@@ -1,0 +1,308 @@
+"""Two-party runtime: wire codec golden bytes, transports, end-to-end
+parity with the in-process session (outputs bit-identical, per-tag wire
+ledger == metered Channel oracle), and the pipelined serving mode."""
+
+import hashlib
+import threading
+
+import numpy as np
+import pytest
+
+from repro.config import PrivacyConfig
+from repro.core.engine import PrivateTransformer, random_weights
+from repro.net import (
+    GarblerEndpoint,
+    InProcPipe,
+    NetProtocolError,
+    PitNetServer,
+    TcpListener,
+    TcpTransport,
+)
+from repro.net import wire as W
+from repro.net.transport import TransportClosed
+from repro.serve import BundlePoolEmpty, NetPrivateServeEngine, PrivateRequest
+
+D, HEADS, DFF, S = 8, 2, 16, 4
+
+
+def _model(seed=0, frac=6, offload=True):
+    rng = np.random.default_rng(seed)
+    weights = random_weights(rng, D, DFF, 1)
+    pcfg = PrivacyConfig(he_poly_n=256, he_num_primes=3, he_t_bits=40,
+                         frac_bits=frac, layernorm_offload=offload)
+    return PrivateTransformer(pcfg, D, HEADS, DFF, weights, seed=seed)
+
+
+def _pipe_pair(model, *, impl="ref", seed=7, timeout=300):
+    srv = PitNetServer(model, S, impl=impl)
+    a, b = InProcPipe.make_pair()
+    srv.serve_transport(b, timeout=timeout)
+    cli = GarblerEndpoint(a, seed=seed, impl=impl, timeout=timeout)
+    return cli, srv
+
+
+# ---------------------------------------------------------------------------
+# wire codec
+# ---------------------------------------------------------------------------
+
+
+def test_wire_roundtrip_typed():
+    payload = {
+        "none": None, "t": True, "f": False, "i": -(1 << 70), "fl": 2.5,
+        "s": "softmax4", "b": b"\x00\x01", "l": [1, "two", None],
+        "a": np.arange(12, dtype=np.uint64).reshape(3, 4),
+    }
+    msg = W.decode_frame(W.encode_msg(W.KIND_CONTROL, "hello", payload))
+    assert msg.kind == W.KIND_CONTROL and msg.tag == "hello"
+    got = msg.payload
+    for k in ("none", "t", "f", "i", "fl", "s", "b", "l"):
+        assert got[k] == payload[k], k
+    assert np.array_equal(got["a"], payload["a"])
+    assert got["a"].dtype == np.uint64
+
+
+def test_wire_proto_segs_roundtrip():
+    segs = [W.Seg("tables:softmax4", W.DIR_C2S, b"\x01" * 32),
+            W.Seg("g-labels", W.DIR_S2C, b"")]
+    msg = W.decode_frame(W.encode_proto(segs, W.PHASE_OFFLINE))
+    assert msg.kind == W.KIND_PROTO and msg.phase == W.PHASE_OFFLINE
+    assert [(s.tag, s.dir, s.data) for s in msg.segs] == \
+        [(s.tag, s.dir, s.data) for s in segs]
+
+
+def test_wire_golden_bytes():
+    """The encoding is deterministic and versioned: same message, same
+    bytes, forever (bump WIRE_VERSION when the layout changes)."""
+    frame = W.encode_msg(
+        W.KIND_SIM, "gc-meta:softmax4",
+        {"perm": np.arange(6, dtype=np.uint32).reshape(2, 3),
+         "n": 42, "name": "softmax4"},
+        phase=W.PHASE_OFFLINE)
+    assert frame[:2] == b"PW" and frame[2] == W.WIRE_VERSION
+    assert hashlib.sha256(frame).hexdigest() == (
+        "49f279af8581e90b783ace4921d4acbe8d970dd60311f0b42d3caa276f015427")
+
+
+def test_wire_version_rejected():
+    frame = bytearray(W.encode_msg(W.KIND_CONTROL, "hello", None))
+    frame[2] = W.WIRE_VERSION + 1
+    with pytest.raises(W.WireError):
+        W.decode_frame(bytes(frame))
+
+
+def test_wire_packers_meter_sizes():
+    """Payload lengths are exactly what the in-process meter counts."""
+    from repro.core.ot import ot_request_bytes, ot_response_bytes
+
+    arr = np.arange(10, dtype=np.uint64).reshape(2, 5)
+    assert len(W.pack_u64(arr)) == arr.size * 8  # shares: size*8
+    assert np.array_equal(W.unpack_u64(W.pack_u64(arr), arr.shape), arr)
+
+    lab = np.arange(2 * 3 * 4, dtype=np.uint32).reshape(2, 3, 4)
+    assert len(W.pack_labels(lab)) == 2 * 3 * 16  # labels: 16B each
+    assert np.array_equal(W.unpack_labels(W.pack_labels(lab), (2, 3)), lab)
+
+    bits = np.array([[1, 0, 1], [0, 1, 1]], np.uint8)
+    req = W.pack_ot_request(bits)
+    assert len(req) == ot_request_bytes(bits.size)
+    assert np.array_equal(W.unpack_ot_request(req, bits.shape), bits)
+    resp = W.pack_ot_response(lab)
+    assert len(resp) == ot_response_bytes(6)
+    assert np.array_equal(W.unpack_ot_response(resp, (2, 3)), lab)
+
+    # identity-HE ct framing: ceil(size/poly_n) blocks of ct_bytes
+    ct_bytes, poly_n = 2 * 3 * 16 * 8, 16
+    data = W.ct_pack(arr, ct_bytes, poly_n)
+    assert len(data) == W.ct_blocks(arr.size, poly_n) * ct_bytes
+    assert np.array_equal(W.ct_unpack(data, arr.shape), arr)
+    rows = np.arange(3, dtype=np.uint64)
+    blk = W.ct_pack_rows(rows, ct_bytes)
+    assert len(blk) == 3 * ct_bytes  # one ct per row (he-cross shape)
+    assert np.array_equal(W.ct_unpack_rows(blk, 3, ct_bytes), rows)
+
+
+# ---------------------------------------------------------------------------
+# transports
+# ---------------------------------------------------------------------------
+
+
+def test_inproc_pipe_duplex_and_close():
+    a, b = InProcPipe.make_pair()
+    a.send(b"ping")
+    assert b.recv(timeout=5) == b"ping"
+    b.send(b"pong")
+    assert a.recv(timeout=5) == b"pong"
+    assert a.bytes_sent == 4 and a.bytes_recv == 4
+    a.close()
+    with pytest.raises(TransportClosed):
+        b.recv(timeout=5)
+
+
+def test_tcp_transport_frames_and_timeout():
+    lst = TcpListener()
+    got = {}
+
+    def server():
+        t = lst.accept(timeout=10)
+        got["frame"] = t.recv(timeout=10)
+        t.send(b"y" * 100_000)  # bigger than one socket buffer read
+        t.close()
+
+    th = threading.Thread(target=server)
+    th.start()
+    cli = TcpTransport.connect("127.0.0.1", lst.port)
+    cli.send(b"x" * 70_000)
+    assert cli.recv(timeout=10) == b"y" * 100_000
+    th.join(timeout=10)
+    assert got["frame"] == b"x" * 70_000
+    with pytest.raises(TransportClosed):
+        cli.recv(timeout=0.2)  # nothing more coming: hard fail, no hang
+    cli.close()
+    lst.close()
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: InProcPipe (shared transcript fixture)
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def netrun():
+    """One two-party transcript (preprocess 2 + 2 runs) next to the
+    in-process metered oracle running the identical workload."""
+    model = _model()
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (S, D))
+
+    cli, srv = _pipe_pair(model)
+    cli.handshake()
+    ids = cli.preprocess(2)
+    y1 = cli.run(x)
+    y2 = cli.run(x)
+
+    sess = model.compile_session(S, impl="ref")
+    bundles = sess.preprocess(2)
+    y_ref1 = sess.run(x, bundles[0])
+    y_ref2 = sess.run(x, bundles[1])
+    return dict(model=model, cli=cli, srv=srv, x=x, ids=ids,
+                y=(y1, y2), y_ref=(y_ref1, y_ref2), oracle=sess.stats)
+
+
+def test_net_output_bit_identical(netrun):
+    assert np.array_equal(netrun["y"][0], netrun["y_ref"][0])
+    assert np.array_equal(netrun["y"][1], netrun["y_ref"][1])
+    want = netrun["model"].forward_float(netrun["x"])
+    assert np.abs(netrun["y"][0] - want).max() < 0.25
+
+
+def test_net_ledger_matches_metered_oracle(netrun):
+    """Per-phase, per-tag wire bytes == the in-process Channel meter."""
+    led = netrun["cli"].shared.ledger
+    st = netrun["oracle"]
+    assert led.offline.by_tag == dict(st.channel_offline.by_tag)
+    assert led.online.by_tag == dict(st.channel_online.by_tag)
+    assert led.offline.total == st.channel_offline.total
+    assert led.online.total == st.channel_online.total
+    # both endpoints saw the same traffic
+    sled = netrun["srv"].shared.ledger
+    assert sled.offline.by_tag == led.offline.by_tag
+    assert sled.online.by_tag == led.online.by_tag
+    # the sim sideband (decode metadata, reveal) is small and separate
+    assert 0 < led.sim_bytes < 0.02 * (led.offline.total + led.online.total)
+
+
+def test_net_bundle_consumed_and_unknown(netrun):
+    cli = netrun["cli"]
+    with pytest.raises(NetProtocolError):
+        cli.run(netrun["x"], bundle_id=netrun["ids"][0])  # consumed
+    with pytest.raises(NetProtocolError):
+        cli.run(netrun["x"])  # pool drained by the fixture's two runs
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: loopback TCP + full-GC LayerNorm variant
+# ---------------------------------------------------------------------------
+
+
+def test_net_tcp_end_to_end():
+    model = _model(seed=3)
+    rng = np.random.default_rng(4)
+    x = rng.normal(0, 1, (S, D))
+    srv = PitNetServer(model, S, impl="ref")
+    lst = TcpListener()
+    th = srv.serve_tcp(lst, accept_timeout=30, timeout=300)
+    cli = GarblerEndpoint(TcpTransport.connect("127.0.0.1", lst.port),
+                          seed=9, impl="ref", timeout=300)
+    th.join(timeout=30)
+    cli.preprocess(1)
+    y = cli.run(x)
+    sess = model.compile_session(S, impl="ref")
+    assert np.array_equal(y, sess.run(x, sess.preprocess(1)[0]))
+    led = cli.shared.ledger
+    st = sess.stats
+    assert led.offline.by_tag == dict(st.channel_offline.by_tag)
+    assert led.online.by_tag == dict(st.channel_online.by_tag)
+    cli.close()
+    lst.close()
+
+
+def test_net_full_gc_layernorm():
+    """--no-offload path: γ/β enter the circuit via the evaluator's OT."""
+    model = _model(seed=5, offload=False)
+    rng = np.random.default_rng(6)
+    x = rng.normal(0, 1, (S, D))
+    cli, _ = _pipe_pair(model, seed=11)
+    cli.preprocess(1)
+    y = cli.run(x)
+    sess = model.compile_session(S, impl="ref")
+    assert np.array_equal(y, sess.run(x, sess.preprocess(1)[0]))
+    led = cli.shared.ledger
+    st = sess.stats
+    assert led.offline.by_tag == dict(st.channel_offline.by_tag)
+    assert led.online.by_tag == dict(st.channel_online.by_tag)
+    cli.close()
+
+
+# ---------------------------------------------------------------------------
+# pipelined serving: dedicated offline pair + online pair
+# ---------------------------------------------------------------------------
+
+
+def test_net_pipelined_refill_overlaps_serving():
+    model = _model(seed=8)
+    rng = np.random.default_rng(9)
+    srv = PitNetServer(model, S, impl="ref")
+    off_c, off_s = InProcPipe.make_pair()
+    on_c, on_s = InProcPipe.make_pair()
+    srv.serve_transport(off_s, timeout=300, name="pit-eval-offline")
+    srv.serve_transport(on_s, timeout=300, name="pit-eval-online")
+    eng = NetPrivateServeEngine(off_c, on_c, pool_target=2, seed=13,
+                                impl="ref", timeout=300)
+    eng.preprocess(1)
+    assert eng.pool_size() == 1
+
+    # hold back offline *responses* until serving is done: refill traffic
+    # is in flight on its own endpoint pair the whole time
+    gate = threading.Event()
+    off_c.recv_gate = gate
+    refill = eng.refill_async(1)
+    req = PrivateRequest(x=rng.normal(0, 1, (S, D)))
+    eng.serve([req])  # online pair unaffected by the gated offline pair
+    assert req.result is not None
+    assert refill.is_alive(), "refill should still be streaming"
+    gate.set()
+    refill.join(timeout=300)
+    assert eng.pool_size() == 1
+
+    # dry pool → clean load-shed signal
+    eng.serve([PrivateRequest(x=rng.normal(0, 1, (S, D)))])
+    with pytest.raises(BundlePoolEmpty):
+        eng.serve([PrivateRequest(x=rng.normal(0, 1, (S, D)))])
+    # maintain tops back up to pool_target over the offline pair
+    assert eng.maintain() == 2
+    # a bad request must not burn the bundle it claimed (rejected before
+    # any wire traffic → returned to the pool, like the in-process engine)
+    with pytest.raises(ValueError):
+        eng.serve([PrivateRequest(x=rng.normal(0, 1, (S, D + 1)))])
+    assert eng.pool_size() == 2
+    eng.close()

@@ -102,6 +102,19 @@ def test_coarse_partition():
     assert max(len(p) for p in parts) - min(len(p) for p in parts) <= 1
 
 
+def test_garble_cycle_table(net):
+    """Garble-side costing uses 21 cy per AND (matching accel/sim.py);
+    the garbling schedule stays a valid topological order."""
+    from repro.accel import sim as AS
+
+    assert SC.gate_cycles(garbling=False)[1] == AS.HALFGATE_EVAL_CY == 18
+    assert SC.gate_cycles(garbling=True)[1] == AS.HALFGATE_GARBLE_CY == 21
+    assert SC.GATE_CYCLES == SC.gate_cycles(garbling=False)  # compat view
+    order = SC.fine_grained_order(net, 1024, garbling=True)
+    assert len(order) == net.num_gates
+    assert SC.check_topological(net, order)
+
+
 def test_cpfe_prioritizes_critical_path():
     # chain of ANDs (critical) + independent XORs: chain must rank first
     cb = CircuitBuilder()
