@@ -28,9 +28,16 @@ Two softmax-row configurations are swept:
   secondary config.
 
 ``python benchmarks/bench_gc_eval.py`` runs both sweeps and writes
-``BENCH_gc_eval.json`` at the repo root; ``--smoke`` (CI and
-``benchmarks/run.py``) runs only the quantized row at I=4 and asserts
-parity + a sane speedup.
+``BENCH_gc_eval.json`` at the repo root (keeping the previously
+committed speedups per point as ``prev`` for comparison); ``--smoke``
+(CI and ``benchmarks/run.py``) runs the quantized row at the I=4 online
+point plus a preprocessing-scale I=64 garble-parity point and asserts
+parity + sane speedups on both paths. :func:`check` (``run.py
+--check``) re-measures a small subset and fails on a >20% speedup
+regression against the committed JSON.
+
+Every point embeds the executor plan's :meth:`LevelPlan.stats` so the
+liveness-compaction and packed-table wins are visible per netlist.
 """
 
 from __future__ import annotations
@@ -151,21 +158,48 @@ def _point(net, instances: int, device_impl: str, reps: int, rounds: int):
     }
 
 
+def _prev_points(label):
+    """Committed speedups per (label, instances) from BENCH_gc_eval.json."""
+    path = Path(__file__).resolve().parents[1] / "BENCH_gc_eval.json"
+    if not path.exists():
+        return {}
+    try:
+        committed = json.loads(path.read_text())
+    except json.JSONDecodeError:
+        return {}
+    out = {}
+    for c in committed.get("configs", []):
+        if c.get("label") != label:
+            continue
+        for p in c.get("points", []):
+            out[p["instances"]] = {
+                "eval_speedup": p["eval"]["speedup"],
+                "garble_speedup": p["garble"]["speedup"],
+            }
+    return out
+
+
 def run_config(cfg, instance_counts, rounds=4, write=print):
     from repro.core.netlist import compile_level_plan
     from repro.kernels.dispatch import resolve_impl
 
     device_impl = resolve_impl("auto")
     net = _net(cfg)
+    prev = _prev_points(cfg["label"])
     points = []
     for inst in instance_counts:
         reps = 3 if inst <= 16 else 1
         r = rounds if inst <= 256 else 2
         pt = _point(net, inst, device_impl, reps, r)
         plan = compile_level_plan(net, instances=inst)
-        pt["plan"] = {"chunks": plan.n_chunks,
-                      "and_width": plan.and_width,
-                      "free_width": plan.free_width}
+        # plan stats: store rows before/after the liveness pass, real vs
+        # padded table rows — the reuse wins, per netlist and regime
+        pt["plan"] = plan.stats()
+        gplan = compile_level_plan(net, instances=inst, garbling=True)
+        if gplan is not plan:  # AND-rich throughput: garble-width plan
+            pt["plan_garble"] = gplan.stats()
+        if inst in prev:
+            pt["prev"] = prev[inst]  # committed trajectory, for diffing
         points.append(pt)
         e = pt["eval"]
         write(f"gc_eval[{net.name}@{cfg['t_bits']}b]_I{inst},"
@@ -173,6 +207,12 @@ def run_config(cfg, instance_counts, rounds=4, write=print):
               f"eval {e['device_mgates_per_s']}Mg/s vs ref "
               f"{e['ref_mgates_per_s']}Mg/s = {e['speedup']}x "
               f"garble {pt['garble']['speedup']}x")
+        s = pt["plan"]
+        write(f"# plan[{net.name}]_I{inst}: store {s['store_rows']} rows "
+              f"(naive {s['store_rows_naive']}, "
+              f"{s['store_row_reduction']}x reuse), tables "
+              f"{s['table_rows_real']} real / {s['table_rows_padded']} "
+              f"padded lanes")
     plan = compile_level_plan(net)
     return {
         "label": cfg["label"],
@@ -180,6 +220,7 @@ def run_config(cfg, instance_counts, rounds=4, write=print):
                     "frac_bits": cfg["frac"], "gates": net.num_gates,
                     "and": net.and_count, "depth": plan.n_levels},
         "device_impl": device_impl,
+        "plan_stats": plan.stats(),
         "points": points,
     }
 
@@ -192,6 +233,13 @@ def full():
     quant = run_config(QUANT, (4, 16, 256), write=write)
     lat = prod["points"][0]
     thr = prod["points"][-1]
+
+    def _garble_at(cfgres, inst):
+        for p in cfgres["points"]:
+            if p["instances"] == inst:
+                return p["garble"]["speedup"]
+        return None
+
     result = {
         "bench": "gc_eval",
         "configs": [prod, quant],
@@ -205,6 +253,13 @@ def full():
             "meets_target": lat["eval"]["speedup"] >= 5.0,
             "throughput_instances": thr["instances"],
             "throughput_eval_speedup": thr["eval"]["speedup"],
+            # the garble-path overhaul's acceptance metric: offline
+            # (preprocessing) garbling at I=256 on both netlists
+            "garble_speedup_at_256": {
+                prod["label"]: _garble_at(prod, 256),
+                quant["label"]: _garble_at(quant, 256),
+            },
+            "garble_target_at_256": 3.0,
         },
     }
     out = Path(__file__).resolve().parents[1] / "BENCH_gc_eval.json"
@@ -216,23 +271,91 @@ def full():
           f"{h['garble_speedup']}x garble — target >= "
           f"{h['target_speedup']}x: "
           f"{'PASS' if h['meets_target'] else 'FAIL'}; throughput (I="
-          f"{h['throughput_instances']}): {h['throughput_eval_speedup']}x")
+          f"{h['throughput_instances']}): {h['throughput_eval_speedup']}x; "
+          f"garble@256: {h['garble_speedup_at_256']}")
     return result
 
 
 def main() -> None:
-    """Smoke entry for benchmarks/run.py and CI: quantized row at I=4,
-    parity + a real regression floor (no JSON). The point measures
-    ~5-11x here; 2x leaves headroom for noisy CI runners while still
-    catching an executor that has fallen behind the numpy loop."""
-    res = run_config(QUANT, (4,), rounds=2)
+    """Smoke entry for benchmarks/run.py and CI (no JSON).
+
+    Two quantized-row points: the I=4 online point (parity + eval
+    regression floor, as before) and a preprocessing-scale I=64 point
+    that exercises the throughput-regime garble path — packed table
+    emission, the liveness-compacted planar store and the split-hash
+    cipher — with bit-parity against the numpy oracle asserted inside
+    ``_point`` and a garble speedup floor. The I=64 garble measures
+    ~3-4x here; the floors (2x eval online, 1.3x garble offline) leave
+    headroom for noisy CI runners while still catching a garble path
+    that has fallen back behind the numpy loop.
+    """
+    res = run_config(QUANT, (4, 64), rounds=2)
     speedup = res["points"][0]["eval"]["speedup"]
     assert speedup >= 2.0, \
         f"device executor regressed: {speedup}x vs numpy loop (floor 2x)"
+    g64 = res["points"][1]["garble"]["speedup"]
+    assert g64 >= 1.3, \
+        f"garble path regressed: {g64}x vs numpy loop at I=64 (floor 1.3x)"
+
+
+def check() -> None:
+    """Regression gate for ``benchmarks/run.py --check``.
+
+    Re-measures a small subset of the committed trajectory (quantized
+    row, online I=4 and preprocessing I=256) and fails when a freshly
+    measured speedup drops more than 20% below the committed
+    ``BENCH_gc_eval.json`` value. Speedups are ratios of two runs on the
+    same box, so they transfer across machines far better than absolute
+    times — but not perfectly (core count shifts the jit-vs-numpy ratio),
+    so a point that misses the 20% band still passes while it clears the
+    absolute health floors below: the gate's job is to catch the garble
+    path sliding back toward the numpy loop, not to fail unrelated PRs
+    on a differently shaped runner.
+    """
+    # a point regressed >20% vs committed AND below these is a failure;
+    # above them the path is unambiguously healthy on any runner
+    floors = {"eval": 3.0, "garble": 2.0}
+    path = Path(__file__).resolve().parents[1] / "BENCH_gc_eval.json"
+    committed = json.loads(path.read_text())
+    want = {}
+    for c in committed["configs"]:
+        if c["label"] != QUANT["label"]:
+            continue
+        for p in c["points"]:
+            want[p["instances"]] = p
+    insts = [i for i in (4, 256) if i in want]
+    if not insts:
+        raise AssertionError(
+            "committed BENCH_gc_eval.json has no quantized points")
+    res = run_config(QUANT, tuple(insts), rounds=3)
+    failures = []
+    for p in res["points"]:
+        ref = want[p["instances"]]
+        for path_ in ("eval", "garble"):
+            got = p[path_]["speedup"]
+            exp = ref[path_]["speedup"]
+            bad = got < 0.8 * exp and got < floors[path_]
+            status = ("REGRESSED" if bad else
+                      "ok" if got >= 0.8 * exp else "ok (above floor)")
+            print(f"# check {path_}@I{p['instances']}: {got}x vs "
+                  f"committed {exp}x (floor {floors[path_]}x) -> "
+                  f"{status}", flush=True)
+            if bad:
+                failures.append(
+                    f"{path_}@I{p['instances']}: {got}x < 80% of "
+                    f"committed {exp}x and < {floors[path_]}x floor")
+    if failures:
+        raise AssertionError(
+            "gc_eval speedups regressed >20% vs committed "
+            f"BENCH_gc_eval.json: {failures}")
+    print("# check passed: speedups within 20% of committed "
+          "(or above the health floors)", flush=True)
 
 
 if __name__ == "__main__":
     if "--smoke" in sys.argv:
         main()
+    elif "--check" in sys.argv:
+        check()
     else:
         full()

@@ -13,12 +13,31 @@
   net    — bench_net            (two-party runtime: transports, ledger
                                  parity, pipelined refill; full run writes
                                  BENCH_net.json)
+
+``--check`` runs ONLY the gc_eval regression gate: re-measure a subset of
+the committed ``BENCH_gc_eval.json`` trajectory and fail on a >20%
+speedup regression (CI runs it right after the bench smoke).
 """
 
 from __future__ import annotations
 
 import sys
 import traceback
+from pathlib import Path
+
+# script-style invocation (`python benchmarks/run.py`) puts benchmarks/
+# itself on sys.path, not the repo root that the `benchmarks.*`
+# namespace imports need — add it (harmless under `-m benchmarks.run`)
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+
+def check() -> None:
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+    from benchmarks import bench_gc_eval
+
+    bench_gc_eval.check()
 
 
 def main() -> None:
@@ -67,4 +86,7 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    if "--check" in sys.argv:
+        check()
+    else:
+        main()

@@ -82,6 +82,22 @@ def _gate_cycles(op: int, garbling: bool) -> int:
     return FREEXOR_CY
 
 
+def program_compute_cycles(net: Netlist, garbling: bool = False) -> int:
+    """Pure PE compute cycles of one instruction stream over ``net``.
+
+    The stall-free floor every schedule is measured against — and the
+    accelerator-side twin of ``repro.sched.schedulers.schedule_cost``
+    (same per-op latency table: 21 cy garble / 18 cy eval Half-Gate with
+    a dense 2-row table write per AND, 1 cy FreeXOR/INV). The regression
+    test in ``test_sched`` pins the two models to each other so the
+    scheduler can never cost a netlist differently than the simulator
+    executes it.
+    """
+    n_and = int(np.sum(net.op == OP_AND))
+    and_cy = HALFGATE_GARBLE_CY if garbling else HALFGATE_EVAL_CY
+    return n_and * and_cy + (net.num_gates - n_and) * FREEXOR_CY
+
+
 def simulate_core(
     net: Netlist,
     prog: SpecProgram,

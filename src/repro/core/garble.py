@@ -138,7 +138,13 @@ def garble(
     in_ids = _input_ids(net)
 
     if impl != "ref":
-        exe = get_executor(net, I, impl)
+        # keep_wires needs every gate's row alive at the end, so it pins
+        # the append-only (compact=False) plan; the default path garbles
+        # through the liveness-compacted store + packed table emission,
+        # on the garble-width plan (tighter AND lanes: a padded AND lane
+        # costs the garbler 4 hash lanes vs the evaluator's 2)
+        exe = get_executor(net, I, impl, compact=not keep_wires,
+                           garbling=True)
         plan = exe.plan
         r = LB.random_delta(k_r, (I,))
         src_labels = LB.random_labels(k_w, (I, len(plan.source_ids)))

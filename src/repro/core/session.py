@@ -134,6 +134,10 @@ class PiTSession:
         the plan is garbled in ONE call covering all its instances across
         all ops and all ``n`` bundles, then sliced per use. HE mask
         products, output masks and Beaver triples are drawn per bundle.
+        At these instance counts the executor runs its throughput regime
+        — liveness-compacted planar wire store and packed garble-table
+        emission (:mod:`repro.core.gc_exec`) — so the offline producer
+        stays ahead of online bundle consumption.
         """
         if n < 1:
             raise ValueError("preprocess needs n >= 1")

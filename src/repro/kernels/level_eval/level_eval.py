@@ -85,7 +85,12 @@ def garble_level_pallas(ops, a0, b0, r, tweaks, *, block=DEFAULT_BLOCK,
     """Garbler lane: ops (G,); a0/b0/r (G,4); tweaks (G,).
 
     Returns (c0, tg, te), each (G,4) uint32 — the fused FreeXOR / INV /
-    Half-Gate garbling pass over one padded level.
+    Half-Gate garbling pass over one padded level. The device executor
+    feeds this lane the AND block ONLY (ops are AND/PAD): free lanes
+    have all-zero table rows by construction, and shipping them through
+    a 3-output kernel tripled the garble lane's write volume for
+    nothing — the executor computes their XOR/INV-offset labels inline
+    and keeps this kernel's DMA budget for rows that exist.
     """
     g = a0.shape[0]
     blk = min(block, max(8, 1 << (g - 1).bit_length()))

@@ -12,7 +12,10 @@ right shape for the VPU (the paper's PE co-issues Half-Gate and FreeXOR
 units; a SIMD machine evaluates both and selects). The garble lane
 mirrors this for the garbler side: FreeXOR / INV-offset / Half-Gate table
 generation in one fused pass, with tg/te masked to zero off the AND lanes
-so padded scatters stay deterministic.
+so padded scatters stay deterministic. (Since the packed-table-emission
+overhaul the device executor hands the garble lane AND/PAD lanes only —
+free-lane table rows are zero by construction and are no longer shipped
+through the kernel; eval still takes the full concatenated level.)
 """
 
 from __future__ import annotations

@@ -46,6 +46,25 @@ def gate_cycles(garbling: bool = False) -> Dict[int, int]:
 GATE_CYCLES = gate_cycles(garbling=False)
 
 
+def schedule_cost(net: Netlist, garbling: bool = False) -> int:
+    """Total PE compute cycles of a schedule under :func:`gate_cycles`.
+
+    Schedule-independent (every topological order issues each gate once);
+    what matters is the latency table. The 21 cy/AND garble constant
+    assumes a *dense* table write — exactly 2 rows per real AND gate.
+    That assumption now matches the device executor bit for bit: packed
+    table emission writes ``table_base[k] + lane`` rows, one per valid
+    AND lane (the old ys-stack emission amortized K×and_width padded
+    rows per walk, i.e. MORE than 2 rows per AND at preprocessing
+    scale, which this costing never modeled). ``accel/sim.py`` prices
+    the same dense write per AND (TABLE_BYTES streamed out);
+    ``test_sched`` pins the two models to each other.
+    """
+    cyc = gate_cycles(garbling)
+    ops = net.op
+    return int(sum(int(np.sum(ops == op)) * c for op, c in cyc.items()))
+
+
 def depth_first_order(net: Netlist) -> np.ndarray:
     return np.arange(net.num_gates, dtype=np.int64)
 

@@ -52,7 +52,10 @@ class PrivateServeEngine:
         other lengths compile lazily on first sight. ``pool_target`` is
         the per-bucket bundle level ``maintain`` refills to. ``impl``
         defaults to ``"auto"``: every bucket's garble/evaluate runs on
-        the device-resident GC executor, never the per-level numpy walk.
+        the device-resident GC executor, never the per-level numpy walk —
+        and bundle refills garble through the executor's throughput
+        regime (packed tables + compacted store), which is what keeps
+        ``refill_async`` faster than the serve path drains the pool.
         """
         self.model = model
         self.pool_target = pool_target

@@ -4,6 +4,7 @@ guarantee (one jitted call per evaluate — no per-level host round trips).
 """
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -204,16 +205,18 @@ def test_width_regimes_both_correct(rng):
         assert np.array_equal(got, net.eval_plain(gb, eb))
 
 
-def test_level_plan_invariants():
-    """Compact row numbering: every chunk reads strictly below its own
-    output block, writes land contiguously, and the store holds exactly
-    one live row per gate."""
+def test_level_plan_invariants_append_only():
+    """compact=False escape hatch: append-only numbering — every chunk
+    reads strictly below its own output block, writes land contiguously,
+    and the store holds exactly one live row per gate."""
     net = _comparator_net()
-    plan = compile_level_plan(net)
+    plan = compile_level_plan(net, compact=False)
+    assert not plan.compact
     K = plan.n_chunks
     stride = plan.and_width + plan.free_width
     n_src = len(plan.source_ids)
     assert plan.n_rows == n_src + net.num_gates + stride + 1
+    assert plan.n_rows == plan.store_rows_naive
     valid = plan.and_valid + plan.free_valid
     assert plan.base[0] == n_src
     assert np.array_equal(np.diff(plan.base), valid[:-1])
@@ -229,3 +232,188 @@ def test_level_plan_invariants():
     assert plan.wire_rows.max() <= dummy
     out_rows = plan.wire_rows[np.asarray(net.outputs)]
     assert np.array_equal(out_rows, plan.out_rows)
+
+
+def test_level_plan_invariants_compact():
+    """Liveness-compacted numbering: the store shrinks below one row per
+    gate, write windows stay clear of sources and the dummy row, and the
+    packed table layout is exactly the cumsum of valid AND lanes."""
+    net = _comparator_net()
+    plan = compile_level_plan(net)  # compact is the default
+    assert plan.compact
+    assert plan.n_rows < plan.store_rows_naive  # reuse actually happened
+    stride = plan.and_width + plan.free_width
+    n_src = len(plan.source_ids)
+    dummy = plan.n_rows - 1
+    # windows never overlap pinned rows (sources below, dummy above);
+    # the read-liveness invariant itself ("no row rewritten while live")
+    # is simulated and asserted by compile_level_plan's validator
+    assert plan.base.min() >= n_src
+    assert (plan.base + stride <= dummy).all()
+    for k in range(plan.n_chunks):
+        assert sorted(plan.perm[k]) == list(range(stride))
+    # outputs stay pinned: every output row is where wire_rows says
+    assert np.array_equal(plan.wire_rows[np.asarray(net.outputs)],
+                          plan.out_rows)
+    # packed tables: chunk-major cumsum layout, one row per real AND
+    assert np.array_equal(np.diff(plan.table_base), plan.and_valid[:-1])
+    assert plan.n_table_rows == net.and_count + plan.and_width
+    assert len(plan.and_rows) == net.and_count
+    assert sorted(plan.and_rows) == list(range(net.and_count))
+
+
+def test_liveness_adversarial_long_lived_row():
+    """A wire produced early and read only at the very end: a naive
+    renumber that recycles rows by production order would clobber it.
+    The liveness pass must keep it pinned across the whole chain — the
+    compile-time plan validator fails otherwise, and the executor output
+    must stay bit-exact.
+
+    (Private generator, not the session-scoped ``rng`` fixture: new
+    tests must not shift the shared stream consumed by later modules.)
+    """
+    rng = np.random.default_rng(71)
+    cb = CircuitBuilder("longlived")
+    a = cb.g_input_word(4)
+    b = cb.e_input_word(4)
+    keep = [cb.AND(a[i], b[i]) for i in range(4)]  # early, read last
+    chain = arith.add(cb, a, b)
+    for _ in range(40):  # long filler chain that churns through rows
+        chain = arith.add(cb, chain, b)
+    tail = [cb.AND(keep[i], chain[i]) for i in range(4)]  # late reads
+    cb.output(list(chain) + keep + tail)
+    net = cb.build()
+    plan = compile_level_plan(net)  # compile-time validator runs here
+    assert plan.compact
+    assert plan.n_rows < plan.store_rows_naive, \
+        "no reuse happened — the adversarial case was not exercised"
+    I = 3
+    gb = rng.integers(0, 2, (I, len(net.garbler_inputs)))
+    eb = rng.integers(0, 2, (I, len(net.evaluator_inputs)))
+    want = net.eval_plain(gb, eb)
+    got = run_garbled(net, jax.random.PRNGKey(9), gb, eb, impl=DEVICE_IMPL)
+    assert np.array_equal(want, got)
+
+
+@pytest.mark.parametrize("impl", [DEVICE_IMPL, "pallas_interpret"])
+@pytest.mark.parametrize("instances", [1, 64])
+def test_packed_table_parity(impl, instances):
+    """Packed table emission (dense carry at table_base offsets, no
+    ys-stack padding) stays bit-exact with the numpy oracle across the
+    latency (I=1) and preprocessing (I=64) regimes."""
+    net = _comparator_net()
+    key = jax.random.PRNGKey(21)
+    g_ref = G.garble(net, key, instances, impl="ref")
+    g_dev = G.garble(net, key, instances, impl=impl)
+    assert np.array_equal(np.asarray(g_ref.tables), np.asarray(g_dev.tables))
+    assert np.array_equal(np.asarray(g_ref.input_zero),
+                          np.asarray(g_dev.input_zero))
+    assert np.array_equal(np.asarray(g_ref.output_perm),
+                          np.asarray(g_dev.output_perm))
+
+
+def test_compact_false_fallback_parity():
+    """The compact=False escape hatch is a full drop-in: same tables,
+    same labels, same end-to-end bits as the compacted default."""
+    rng = np.random.default_rng(72)  # private: keep the shared stream
+    net = _adder_net()
+    key = jax.random.PRNGKey(31)
+    I = 5
+    g_compact = G.garble(net, key, I, impl=DEVICE_IMPL)
+    exe = get_executor(net, I, DEVICE_IMPL, compact=False)
+    assert not exe.plan.compact
+    from repro.core import labels as LB
+    k_r, k_w = jax.random.split(key)
+    r = LB.random_delta(k_r, (I,))
+    src = LB.random_labels(k_w, (I, len(exe.plan.source_ids)))
+    in_zero, tables, out_perm = exe.garble(src, r)
+    assert np.array_equal(np.asarray(g_compact.tables), np.asarray(tables))
+    assert np.array_equal(np.asarray(g_compact.output_perm),
+                          np.asarray(out_perm))
+    gb = rng.integers(0, 2, (I, 8))
+    eb = rng.integers(0, 2, (I, 8))
+    got = run_garbled(net, jax.random.PRNGKey(41), gb, eb, impl=DEVICE_IMPL)
+    assert np.array_equal(got, net.eval_plain(gb, eb))
+
+
+def test_keep_wires_requires_append_only():
+    """keep_wires garbling routes to the compact=False plan (the compacted
+    store recycles rows, so a full wire snapshot is impossible there)."""
+    net = _adder_net()
+    exe = get_executor(net, 2, DEVICE_IMPL, compact=True)
+    src = jnp.zeros((2, len(exe.plan.source_ids), 4), jnp.uint32)
+    r = jnp.ones((2, 4), jnp.uint32)
+    with pytest.raises(ValueError, match="keep_wires"):
+        exe.garble(src, r, keep_wires=True)
+    # the public API routes around it
+    gc = G.garble(net, jax.random.PRNGKey(1), 2, impl=DEVICE_IMPL,
+                  keep_wires=True)
+    assert gc.wire_zero is not None
+
+
+def test_garble_width_plan_interop():
+    """AND-rich netlists garble on a tighter-AND-width plan than they
+    evaluate on (4 hash lanes per padded AND lane garbler-side vs 2).
+    Tables are dense-slot ordered, so the two plans interoperate — and
+    stay bit-exact with the oracle."""
+    cb = CircuitBuilder("andrich")
+    a = cb.g_input_word(96)
+    b = cb.e_input_word(96)
+    cb.output([cb.AND(a[i], b[i]) for i in range(96)])
+    net = cb.build()
+    I = 16  # throughput regime
+    eplan = compile_level_plan(net, instances=I)
+    gplan = compile_level_plan(net, instances=I, garbling=True)
+    assert gplan.and_width < eplan.and_width  # distinct plans engaged
+    key = jax.random.PRNGKey(13)
+    g_ref = G.garble(net, key, I, impl="ref")
+    g_dev = G.garble(net, key, I, impl=DEVICE_IMPL)
+    assert np.array_equal(np.asarray(g_ref.tables), np.asarray(g_dev.tables))
+    rng = np.random.default_rng(73)  # private: keep the shared stream
+    gb = rng.integers(0, 2, (I, 96))
+    eb = rng.integers(0, 2, (I, 96))
+    got = run_garbled(net, key, gb, eb, impl=DEVICE_IMPL)
+    assert np.array_equal(got, net.eval_plain(gb, eb))
+
+
+@pytest.mark.parametrize("impl", [DEVICE_IMPL, "pallas_interpret"])
+def test_prefetch_parity(impl):
+    """The double-buffered speculative gather (prefetch=True) is purely a
+    scheduling change: garble and evaluate outputs are bit-identical to
+    the default path — including the forwarding patch for lanes the
+    current chunk itself just produced."""
+    from repro.core import labels as LB
+    from repro.core.gc_exec import LevelExecutor
+
+    net = _comparator_net()
+    I = 4
+    plan = compile_level_plan(net, instances=I)
+    exe_pf = LevelExecutor(plan, I, impl, prefetch=True)
+    exe_np = LevelExecutor(plan, I, impl, prefetch=False)
+    assert exe_pf.prefetch and not exe_np.prefetch
+    key = jax.random.PRNGKey(17)
+    k_r, k_w = jax.random.split(key)
+    r = LB.random_delta(k_r, (I,))
+    src = LB.random_labels(k_w, (I, len(plan.source_ids)))
+    z_pf, tab_pf, perm_pf = exe_pf.garble(src, r)
+    z_np, tab_np, perm_np = exe_np.garble(src, r)
+    assert np.array_equal(np.asarray(tab_pf), np.asarray(tab_np))
+    assert np.array_equal(np.asarray(z_pf), np.asarray(z_np))
+    assert np.array_equal(np.asarray(perm_pf), np.asarray(perm_np))
+    active = LB.random_labels(jax.random.PRNGKey(5),
+                              (I, len(plan.source_ids)))
+    o_pf = exe_pf.evaluate(active, tab_pf)
+    o_np = exe_np.evaluate(active, tab_np)
+    assert np.array_equal(np.asarray(o_pf), np.asarray(o_np))
+
+
+def test_plan_stats_report_reuse():
+    """stats() surfaces the liveness and packed-table wins per netlist."""
+    net = _comparator_net()
+    s = compile_level_plan(net).stats()
+    assert s["compact"] and s["store_rows"] < s["store_rows_naive"]
+    assert s["store_row_reduction"] > 1.0
+    assert s["table_rows_real"] == net.and_count
+    assert s["table_rows_padded"] >= s["table_rows_real"]
+    s_naive = compile_level_plan(net, compact=False).stats()
+    assert s_naive["store_rows"] == s_naive["store_rows_naive"]

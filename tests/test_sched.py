@@ -115,6 +115,30 @@ def test_garble_cycle_table(net):
     assert SC.check_topological(net, order)
 
 
+def test_schedule_cost_parity_with_accel_sim(net):
+    """The scheduler's costing and the accelerator model price a netlist
+    identically in both phases — the 21 cy/AND garble constant (4 hash
+    lanes + a dense 2-row table write) now matches the packed-emission
+    device executor, which writes exactly 2 table rows per real AND
+    (pad-lane spill is overwritten in place, never amortized per AND)."""
+    from repro.accel import sim as AS
+    from repro.core.netlist import OP_AND
+
+    for garbling in (False, True):
+        assert SC.schedule_cost(net, garbling=garbling) == \
+            AS.program_compute_cycles(net, garbling=garbling)
+    n_and = int(np.sum(net.op == OP_AND))
+    diff = SC.schedule_cost(net, garbling=True) - \
+        SC.schedule_cost(net, garbling=False)
+    assert diff == n_and * (AS.HALFGATE_GARBLE_CY - AS.HALFGATE_EVAL_CY)
+    # the device executor's packed layout keeps the dense-write premise:
+    # exactly one packed table row pair per real AND gate
+    from repro.core.netlist import compile_level_plan
+    plan = compile_level_plan(net)
+    assert len(plan.and_rows) == n_and
+    assert sorted(plan.and_rows) == list(range(n_and))
+
+
 def test_cpfe_prioritizes_critical_path():
     # chain of ANDs (critical) + independent XORs: chain must rank first
     cb = CircuitBuilder()
