@@ -1,0 +1,17 @@
+#!/usr/bin/env python
+"""Repo lint entry point — see ``repro.analysis.cli`` for the flags.
+
+Usage (from the repo root):
+
+    python scripts/lint.py --all --baseline analysis/baseline.json
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())

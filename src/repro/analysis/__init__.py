@@ -1,0 +1,30 @@
+"""Static analysis for the PiT stack: netlist dataflow + protocol linters.
+
+Two pillars, one CLI (``scripts/lint.py`` / ``python -m repro.analysis``):
+
+* :mod:`repro.analysis.netcheck` — structural verification and dataflow
+  passes (constant propagation, dead-gate/dead-wire detection, CSE
+  duplicate detection, level histograms) over
+  :class:`repro.core.netlist.Netlist`. Its counters feed
+  ``Netlist.stats()`` / ``LevelPlan.stats()`` and the ``bench_gc_eval``
+  JSON, and are the measurement front-end for the ROADMAP's
+  AND-minimization item.
+* :mod:`repro.analysis.secretflow` / :mod:`repro.analysis.jit_hygiene` —
+  AST linters over the protocol and kernel sources: secret-typed values
+  (labels, FreeXOR delta, masks, shares) must not reach a transport
+  send, log call or exception message except through an approved
+  masking/opening API; jitted bodies must not branch in Python on traced
+  values, call host numpy on traced values, or draw from global RNGs.
+
+Findings diff against a checked-in baseline (``analysis/baseline.json``)
+so CI fails only on *new* findings; see :mod:`repro.analysis.report`.
+"""
+
+from repro.analysis.report import Baseline, Finding  # noqa: F401
+from repro.analysis.netcheck import (  # noqa: F401
+    NetlistError,
+    analyze_netlist,
+    dataflow_summary,
+    verify_netlist,
+    verify_netlist_strict,
+)

@@ -1,0 +1,8 @@
+"""``python -m repro.analysis`` — same CLI as ``scripts/lint.py``."""
+
+import sys
+
+from repro.analysis.cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

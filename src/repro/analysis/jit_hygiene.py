@@ -1,0 +1,306 @@
+"""AST lints for jitted bodies and protocol-path RNG discipline.
+
+Jit hygiene (over ``kernels/`` and ``core/gc_exec.py``): inside a
+function that gets ``jax.jit``-compiled (decorated, wrapped by a
+``jax.jit(...)`` call, or used as a ``lax.scan`` body), the *parameters*
+are traced values. The pass flags:
+
+* ``jit-py-branch`` — Python ``if``/``while``/ternary/``assert`` whose
+  test depends on a traced value (concretization error at trace time, or
+  silently baked-in when it happens to be concrete). Branching on static
+  Python config (``self.planar``, closure ints, ``static_argnames``) is
+  fine and not flagged.
+* ``jit-host-np`` — host ``np.*`` calls fed a traced value: the result
+  silently leaves the traced graph (constant-folds the tracer or
+  errors). ``np.*`` on static plan arrays is idiomatic and not flagged.
+* ``jit-host-cast`` — ``int()/float()/bool()/.item()`` on traced values.
+* ``jit-time-random`` — ``time.*`` / stdlib ``random.*`` inside a jitted
+  body: traced once, frozen forever.
+
+Protocol-path RNG (over ``core/protocol.py``, ``core/session.py``,
+``net/party.py``): ``proto-global-rng`` flags draws from the *global*
+numpy RNG (``np.random.rand`` etc.) or stdlib ``random`` — protocol
+randomness must come from per-party seeded ``Generator`` objects
+(``default_rng``/``PRNGKey`` construction is the approved pattern), both
+for reproducibility and because the global stream is shared mutable
+state across parties in-process, which silently correlates "independent"
+masks.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+from typing import List, Optional, Set
+
+from repro.analysis.report import Finding
+
+#: jit files the CI lint covers by default (repo-relative); directories
+#: are swept recursively
+DEFAULT_JIT_PATHS = (
+    "src/repro/kernels",
+    "src/repro/core/gc_exec.py",
+)
+DEFAULT_PROTO_PATHS = (
+    "src/repro/core/protocol.py",
+    "src/repro/core/session.py",
+    "src/repro/net/party.py",
+)
+
+_GLOBAL_RNG_OK = {"default_rng", "PRNGKey", "Generator", "SeedSequence",
+                  "BitGenerator", "Philox", "PCG64", "split", "fold_in"}
+_CASTS = {"int", "float", "bool", "complex"}
+
+
+def _call_name(func: ast.expr) -> str:
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    if isinstance(func, ast.Name):
+        return func.id
+    return ""
+
+
+def _attr_chain(node: ast.expr) -> List[str]:
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+    return parts[::-1]
+
+
+def _is_jax_jit(node: ast.expr) -> bool:
+    """Match ``jax.jit``, ``jit``, ``partial(jax.jit, ...)``,
+    ``functools.partial(jit, ...)``."""
+    chain = _attr_chain(node) if not isinstance(node, ast.Call) else []
+    if chain and chain[-1] == "jit":
+        return True
+    if isinstance(node, ast.Call) and _call_name(node.func) == "partial":
+        return any(_is_jax_jit(a) for a in node.args)
+    return False
+
+
+def _static_argnames(call: ast.Call) -> Set[str]:
+    names: Set[str] = set()
+    for kw in call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(
+                        sub.value, str):
+                    names.add(sub.value)
+    return names
+
+
+class _JitBodies(ast.NodeVisitor):
+    """Collect function defs that become jitted, with static-arg names."""
+
+    def __init__(self) -> None:
+        self.defs = {}  # name -> FunctionDef (last wins; files are small)
+        self.jitted = {}  # name -> static argnames
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.defs[node.name] = node
+        for dec in node.decorator_list:
+            if _is_jax_jit(dec):
+                static = _static_argnames(dec) if isinstance(
+                    dec, ast.Call) else set()
+                self.jitted[node.name] = static
+        self.generic_visit(node)
+
+    visit_AsyncFunctionDef = visit_FunctionDef  # type: ignore[assignment]
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node.func)
+        if name == "jit" and _is_jax_jit(node.func):
+            for a in node.args:
+                target = _call_name(a) if isinstance(
+                    a, (ast.Attribute, ast.Name)) else ""
+                if target:
+                    self.jitted[target] = _static_argnames(node)
+        elif name == "scan":
+            # lax.scan(body, ...): the body's params are traced
+            if node.args:
+                target = _call_name(node.args[0]) if isinstance(
+                    node.args[0], (ast.Attribute, ast.Name)) else ""
+                if target:
+                    self.jitted.setdefault(target, set())
+        self.generic_visit(node)
+
+
+class _JitBodyLint:
+    """Taint = 'derived from a traced parameter' within one jitted body."""
+
+    def __init__(self, fn: ast.FunctionDef, path: str, qualname: str,
+                 static: Set[str]):
+        self.fn = fn
+        self.path = path
+        self.qualname = qualname
+        self.findings: List[Finding] = []
+        args = fn.args
+        names = [a.arg for a in (
+            args.posonlyargs + args.args + args.kwonlyargs)]
+        if args.vararg:
+            names.append(args.vararg.arg)
+        self.traced: Set[str] = {
+            n for n in names if n != "self" and n not in static}
+        # params of nested defs (scan bodies etc.) are traced too
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.FunctionDef) and sub is not fn:
+                for a in sub.args.args:
+                    if a.arg != "self":
+                        self.traced.add(a.arg)
+
+    def is_traced(self, node: ast.expr) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in self.traced
+        if isinstance(node, ast.Attribute):
+            return False  # self.* / closure config is static
+        if isinstance(node, ast.Call):
+            return any(self.is_traced(a) for a in node.args) or any(
+                self.is_traced(kw.value) for kw in node.keywords)
+        if isinstance(node, (ast.Tuple, ast.List)):
+            return any(self.is_traced(e) for e in node.elts)
+        if isinstance(node, (ast.BinOp,)):
+            return self.is_traced(node.left) or self.is_traced(node.right)
+        if isinstance(node, ast.BoolOp):
+            return any(self.is_traced(v) for v in node.values)
+        if isinstance(node, ast.UnaryOp):
+            return self.is_traced(node.operand)
+        if isinstance(node, ast.Compare):
+            return self.is_traced(node.left) or any(
+                self.is_traced(c) for c in node.comparators)
+        if isinstance(node, ast.Subscript):
+            return self.is_traced(node.value)
+        if isinstance(node, ast.IfExp):
+            return (self.is_traced(node.body) or self.is_traced(node.test)
+                    or self.is_traced(node.orelse))
+        return False
+
+    def _bind(self, target: ast.expr, traced: bool) -> None:
+        if isinstance(target, ast.Name) and traced:
+            self.traced.add(target.id)
+        elif isinstance(target, (ast.Tuple, ast.List)):
+            for e in target.elts:
+                self._bind(e, traced)
+
+    def run(self) -> List[Finding]:
+        for _ in range(4):
+            before = len(self.traced)
+            for node in ast.walk(self.fn):
+                if isinstance(node, ast.Assign):
+                    t = self.is_traced(node.value)
+                    for tgt in node.targets:
+                        self._bind(tgt, t)
+                elif isinstance(node, ast.For):
+                    self._bind(node.target, self.is_traced(node.iter))
+            if len(self.traced) == before:
+                break
+
+        for node in ast.walk(self.fn):
+            if isinstance(node, (ast.If, ast.While)) and self.is_traced(
+                    node.test):
+                self._add("jit-py-branch", node,
+                          "Python branch on a traced value inside a "
+                          "jitted body (use lax.cond/select)")
+            elif isinstance(node, ast.IfExp) and self.is_traced(node.test):
+                self._add("jit-py-branch", node,
+                          "Python ternary on a traced value inside a "
+                          "jitted body (use jnp.where)")
+            elif isinstance(node, ast.Assert) and self.is_traced(node.test):
+                self._add("jit-py-branch", node,
+                          "assert on a traced value inside a jitted body")
+            elif isinstance(node, ast.Call):
+                self._scan_call(node)
+        return self.findings
+
+    def _scan_call(self, node: ast.Call) -> None:
+        chain = _attr_chain(node.func)
+        name = _call_name(node.func)
+        args = list(node.args) + [kw.value for kw in node.keywords]
+        if chain and chain[0] in ("np", "numpy") and any(
+                self.is_traced(a) for a in args):
+            self._add("jit-host-np", node,
+                      f"host numpy call np.{name}() on a traced value "
+                      f"inside a jitted body (use jnp)")
+        if name in _CASTS and isinstance(node.func, ast.Name) and any(
+                self.is_traced(a) for a in args):
+            self._add("jit-host-cast", node,
+                      f"{name}() concretizes a traced value inside a "
+                      f"jitted body")
+        if name == "item" and isinstance(node.func, ast.Attribute) and \
+                self.is_traced(node.func.value):
+            self._add("jit-host-cast", node,
+                      ".item() concretizes a traced value inside a "
+                      "jitted body")
+        if chain and chain[0] in ("time", "random"):
+            self._add("jit-time-random", node,
+                      f"{chain[0]}.{name}() inside a jitted body is "
+                      f"traced once and frozen into the executable")
+
+    def _add(self, rule: str, node: ast.AST, msg: str) -> None:
+        self.findings.append(Finding(
+            "jit", rule, self.path, getattr(node, "lineno", 0),
+            self.qualname, msg))
+
+
+def lint_jit_file(path: str, rel: Optional[str] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    rel = rel or path
+    coll = _JitBodies()
+    coll.visit(tree)
+    findings: List[Finding] = []
+    for name, static in coll.jitted.items():
+        fn = coll.defs.get(name)
+        if fn is not None:
+            findings.extend(_JitBodyLint(fn, rel, name, static).run())
+    return findings
+
+
+def lint_proto_rng(path: str, rel: Optional[str] = None) -> List[Finding]:
+    with open(path, "r", encoding="utf-8") as f:
+        tree = ast.parse(f.read(), filename=path)
+    rel = rel or path
+    findings: List[Finding] = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        chain = _attr_chain(node.func)
+        name = _call_name(node.func)
+        if name in _GLOBAL_RNG_OK:
+            continue
+        hit = None
+        if len(chain) >= 2 and chain[0] in ("np", "numpy") and \
+                chain[1] == "random":
+            hit = f"np.random.{name}"
+        elif len(chain) == 2 and chain[0] == "random":
+            hit = f"random.{name}"
+        if hit:
+            findings.append(Finding(
+                "jit", "proto-global-rng", rel,
+                getattr(node, "lineno", 0), hit,
+                f"{hit}() draws from a global RNG in a protocol path — "
+                f"use a per-party seeded Generator"))
+    return findings
+
+
+def run_jit_hygiene(root: str, jit_paths=None,
+                    proto_paths=None) -> List[Finding]:
+    findings: List[Finding] = []
+    for rel in (jit_paths or DEFAULT_JIT_PATHS):
+        p = rel if os.path.isabs(rel) else os.path.join(root, rel)
+        if os.path.isdir(p):
+            for dirpath, _dirnames, filenames in os.walk(p):
+                for fname in sorted(filenames):
+                    if fname.endswith(".py"):
+                        fp = os.path.join(dirpath, fname)
+                        findings.extend(
+                            lint_jit_file(fp, os.path.relpath(fp, root)))
+        elif os.path.exists(p):
+            findings.extend(lint_jit_file(p, os.path.relpath(p, root)))
+    for rel in (proto_paths or DEFAULT_PROTO_PATHS):
+        p = rel if os.path.isabs(rel) else os.path.join(root, rel)
+        if os.path.exists(p):
+            findings.extend(lint_proto_rng(p, os.path.relpath(p, root)))
+    return findings

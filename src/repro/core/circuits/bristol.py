@@ -85,25 +85,62 @@ def emit(net: Netlist) -> str:
     return "\n".join(lines) + "\n"
 
 
-def parse(text: str, name: str = "") -> Netlist:
+def parse(text: str, name: str = "", verify: bool = True) -> Netlist:
+    """Parse a Bristol Fashion netlist.
+
+    Malformed files — bad headers, wrong gate arity, non-integer or
+    out-of-range wires, gate-count mismatches — raise ``ValueError``
+    with the offending line, and the result is run through the
+    structural verifier (:func:`repro.analysis.verify_netlist_strict`:
+    topological order, single drivers, const consistency, reachable
+    outputs) so a foreign circuit fails HERE with a message instead of
+    deep inside ``compile_level_plan`` or, worse, garbling the wrong
+    function. ``verify=False`` skips the verifier (not the arity/range
+    checks) for callers that deliberately build bad netlists.
+    """
+
+    def fail(msg: str, ln: str = "") -> "ValueError":
+        where = f" in line {ln!r}" if ln else ""
+        return ValueError(f"bristol parse{f' [{name}]' if name else ''}: "
+                          f"{msg}{where}")
+
+    def ints(parts: List[str], ln: str) -> List[int]:
+        try:
+            return [int(p) for p in parts]
+        except ValueError:
+            raise fail("non-integer field", ln) from None
+
     const_bits = {}
     lines = []
     for ln in text.splitlines():
         ln = ln.strip()
         if ln.startswith("# const:"):
             body = ln[len("# const:"):]
-            wires_s, bits_s = body.split("=")
-            wires = [int(w) for w in wires_s.split()]
+            if "=" not in body:
+                raise fail("malformed '# const:' header", ln)
+            wires_s, bits_s = body.split("=", 1)
+            wires = ints(wires_s.split(), ln)
             bits = bits_s.strip()
+            if len(bits) != len(wires) or set(bits) - {"0", "1"}:
+                raise fail("const header bits must be one 0/1 per wire", ln)
             const_bits = {w: int(b) for w, b in zip(wires, bits)}
             continue
         if ln.startswith("#"):
             continue
         lines.append(ln)
-    hdr = lines[0].split()
-    num_gates, num_wires = int(hdr[0]), int(hdr[1])
-    in_hdr = list(map(int, lines[1].split()))
-    n_in_vals, in_counts = in_hdr[0], in_hdr[1:]
+    if len(lines) < 3:
+        raise fail(f"expected >= 3 header lines, got {len(lines)}")
+    hdr = ints(lines[0].split(), lines[0])
+    if len(hdr) != 2:
+        raise fail("header must be '<num_gates> <num_wires>'", lines[0])
+    num_gates, num_wires = hdr
+    if num_gates < 0 or num_wires <= 0:
+        raise fail(f"bad sizes: {num_gates} gates, {num_wires} wires")
+    in_hdr = ints(lines[1].split(), lines[1])
+    if not in_hdr or len(in_hdr) != in_hdr[0] + 1:
+        raise fail("input header must be '<n> <count_1> ... <count_n>'",
+                   lines[1])
+    in_counts = in_hdr[1:]
     # wires are assigned to inputs first, in declaration order
     cursor = 0
     groups = []
@@ -114,31 +151,40 @@ def parse(text: str, name: str = "") -> Netlist:
     e_inputs = groups[1] if len(groups) > 1 else []
     if len(groups) > 2 and not const_bits:
         const_bits = {w: 0 for w in groups[2]}
-    out_hdr = list(map(int, lines[2].split()))
+    out_hdr = ints(lines[2].split(), lines[2])
+    if not out_hdr or len(out_hdr) != out_hdr[0] + 1:
+        raise fail("output header must be '<n> <count_1> ... <count_n>'",
+                   lines[2])
     n_out = sum(out_hdr[1:])
+    if n_out > num_wires:
+        raise fail(f"{n_out} output wires > {num_wires} total wires")
 
+    arity = {"INV": (1, OP_INV), "NOT": (1, OP_INV),
+             "AND": (2, OP_AND), "XOR": (2, OP_XOR)}
     ops, in0, in1, out = [], [], [], []
     for ln in lines[3:]:
         if not ln:
             continue
         parts = ln.split()
         kind = parts[-1].upper()
-        if kind == "INV" or kind == "NOT":
-            ops.append(OP_INV)
-            in0.append(int(parts[2]))
-            in1.append(int(parts[2]))
-            out.append(int(parts[3]))
-        elif kind in ("AND", "XOR"):
-            ops.append(OP_AND if kind == "AND" else OP_XOR)
-            in0.append(int(parts[2]))
-            in1.append(int(parts[3]))
-            out.append(int(parts[4]))
-        else:
-            raise ValueError(f"unsupported gate {kind}")
-    assert len(ops) == num_gates, (len(ops), num_gates)
+        if kind not in arity:
+            raise fail(f"unsupported gate {kind!r}", ln)
+        n_in, opc = arity[kind]
+        fields = ints(parts[:-1], ln)
+        if len(fields) != 2 + n_in + 1 or fields[0] != n_in \
+                or fields[1] != 1:
+            raise fail(f"{kind} gate must read '{n_in} 1 "
+                       f"<in...> <out> {kind}'", ln)
+        ops.append(opc)
+        in0.append(fields[2])
+        in1.append(fields[2] if n_in == 1 else fields[3])
+        out.append(fields[2 + n_in])
+    if len(ops) != num_gates:
+        raise fail(f"header promises {num_gates} gates, file has "
+                   f"{len(ops)}")
     # Bristol convention: outputs are the last n_out wires
     outputs = list(range(num_wires - n_out, num_wires))
-    return Netlist(
+    net = Netlist(
         num_wires=num_wires,
         op=np.asarray(ops, np.uint8),
         in0=np.asarray(in0, np.int32),
@@ -150,3 +196,7 @@ def parse(text: str, name: str = "") -> Netlist:
         const_bits=const_bits,
         name=name,
     )
+    if verify:
+        from repro.analysis.netcheck import verify_netlist_strict
+        verify_netlist_strict(net)  # raises NetlistError (a ValueError)
+    return net

@@ -55,6 +55,7 @@ class CircuitBuilder:
         self._const_of: Dict[int, int] = {}  # wire -> 0/1 (known constant)
         self._const_wire: Dict[int, int] = {}  # bit -> materialized wire
         self._inv_of: Dict[int, int] = {}  # wire -> its INV wire (dedup)
+        self._cse: Dict[Tuple[int, int, int], int] = {}  # structural dedup
 
     # ---- wires -------------------------------------------------------------
     def _new(self) -> int:
@@ -115,7 +116,13 @@ class CircuitBuilder:
             return self.INV(a)
         if a == b:
             return self.constant(0)
-        return self._emit(OP_XOR, a, b)
+        if self._inv_of.get(a) == b:
+            return self.constant(1)
+        key = (OP_XOR, a, b) if a < b else (OP_XOR, b, a)
+        w = self._cse.get(key)
+        if w is None:
+            w = self._cse[key] = self._emit(OP_XOR, a, b)
+        return w
 
     def AND(self, a: int, b: int) -> int:
         ca, cb = self.is_const(a), self.is_const(b)
@@ -129,7 +136,13 @@ class CircuitBuilder:
             return a
         if a == b:
             return a
-        return self._emit(OP_AND, a, b)
+        if self._inv_of.get(a) == b:
+            return self.constant(0)
+        key = (OP_AND, a, b) if a < b else (OP_AND, b, a)
+        w = self._cse.get(key)
+        if w is None:
+            w = self._cse[key] = self._emit(OP_AND, a, b)
+        return w
 
     def INV(self, a: int) -> int:
         ca = self.is_const(a)
@@ -157,13 +170,72 @@ class CircuitBuilder:
             wires = [wires]
         self._outputs.extend(wires)
 
-    def build(self) -> Netlist:
+    def build(self, prune: bool = True) -> Netlist:
+        """Finalize into a Netlist.
+
+        ``prune=True`` (default) drops gates whose output never reaches a
+        netlist output — composed generators routinely compute wide
+        intermediate words and then slice (e.g. ``exp``'s widened q
+        product), leaving whole dead cones that would still cost garbled
+        tables and hash lanes. Party input wires are always kept (the
+        protocol's I/O contract); unused constant wires are dropped.
+        Wires are renumbered compactly, preserving creation order (and
+        therefore topological gate order).
+        """
+        ops, in0, in1, out = self._ops, self._in0, self._in1, self._out
+        G, W = len(ops), self._n
+        if prune and G:
+            needed = bytearray(W)
+            for w in self._outputs:
+                needed[w] = 1
+            live = bytearray(G)
+            for g in range(G - 1, -1, -1):
+                if needed[out[g]]:
+                    live[g] = 1
+                    needed[in0[g]] = 1
+                    if ops[g] != OP_INV:
+                        needed[in1[g]] = 1
+            if not all(live):
+                keep_wire = bytearray(W)
+                for w in self._g_inputs:
+                    keep_wire[w] = 1
+                for w in self._e_inputs:
+                    keep_wire[w] = 1
+                for w in self._outputs:
+                    keep_wire[w] = 1
+                for w in self._const_of:
+                    if needed[w]:
+                        keep_wire[w] = 1
+                for g in range(G):
+                    if live[g]:
+                        keep_wire[in0[g]] = 1
+                        keep_wire[in1[g]] = 1
+                        keep_wire[out[g]] = 1
+                remap = np.cumsum(
+                    np.frombuffer(keep_wire, np.uint8)).astype(np.int32) - 1
+                lv = np.frombuffer(live, np.uint8).astype(bool)
+                return Netlist(
+                    num_wires=int(remap[-1]) + 1,
+                    op=np.asarray(ops, np.uint8)[lv],
+                    in0=remap[np.asarray(in0, np.int32)[lv]],
+                    in1=remap[np.asarray(in1, np.int32)[lv]],
+                    out=remap[np.asarray(out, np.int32)[lv]],
+                    garbler_inputs=remap[np.asarray(
+                        self._g_inputs, np.int32)],
+                    evaluator_inputs=remap[np.asarray(
+                        self._e_inputs, np.int32)],
+                    outputs=remap[np.asarray(self._outputs, np.int32)],
+                    const_bits={int(remap[w]): b
+                                for w, b in self._const_of.items()
+                                if needed[w]},
+                    name=self.name,
+                )
         return Netlist(
-            num_wires=self._n,
-            op=np.asarray(self._ops, np.uint8),
-            in0=np.asarray(self._in0, np.int32),
-            in1=np.asarray(self._in1, np.int32),
-            out=np.asarray(self._out, np.int32),
+            num_wires=W,
+            op=np.asarray(ops, np.uint8),
+            in0=np.asarray(in0, np.int32),
+            in1=np.asarray(in1, np.int32),
+            out=np.asarray(out, np.int32),
             garbler_inputs=np.asarray(self._g_inputs, np.int32),
             evaluator_inputs=np.asarray(self._e_inputs, np.int32),
             outputs=np.asarray(self._outputs, np.int32),

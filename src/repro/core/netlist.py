@@ -50,7 +50,7 @@ class Netlist:
 
     def stats(self) -> Dict:
         lv = self.levels()
-        return {
+        st = {
             "name": self.name,
             "wires": self.num_wires,
             "gates": self.num_gates,
@@ -61,6 +61,12 @@ class Netlist:
             "max_level_width": max((len(l) for l in lv), default=0),
             "garbled_table_bytes": self.and_count * 32,  # 2 rows x 16B
         }
+        # dataflow counters (dead/foldable/duplicate gates, removable
+        # ANDs) from the static analyzer — the measurement front-end of
+        # the AND-minimization work; cached on the netlist
+        from repro.analysis.netcheck import dataflow_summary
+        st.update(dataflow_summary(self))
+        return st
 
     # ---- levelization (TPU-plane schedule) --------------------------------
     def levels(self) -> List[np.ndarray]:
@@ -204,6 +210,7 @@ class LevelPlan:
     compact: bool = False  # liveness-compacted rows?
     store_rows_naive: int = 0  # store size the append-only numbering needs
     _executors: Dict = field(default_factory=dict)  # (I, impl) -> executor
+    _net: Optional["Netlist"] = None  # source netlist (stats counters)
 
     @property
     def widths(self) -> Tuple[int, int]:
@@ -224,7 +231,7 @@ class LevelPlan:
         emission used to materialize). Surfaced by ``bench_gc_eval`` so
         reuse wins are visible per netlist."""
         padded_tables = self.n_chunks * self.and_width
-        return {
+        st = {
             "chunks": self.n_chunks,
             "and_width": self.and_width,
             "free_width": self.free_width,
@@ -238,6 +245,14 @@ class LevelPlan:
             "table_pad_ratio": round(
                 padded_tables / max(self.n_and, 1), 2),
         }
+        net = self._net
+        if net is not None:
+            # removable-AND / dead-gate counters of the *source netlist*
+            # (compile_level_plan pins it): how much of the plan's lane
+            # and table volume the dataflow analyzer can still prove away
+            from repro.analysis.netcheck import dataflow_summary
+            st.update(dataflow_summary(net))
+        return st
 
     def source_positions(self, wire_ids) -> np.ndarray:
         """Positions of ``wire_ids`` inside the ``source_ids`` ordering."""
@@ -600,6 +615,7 @@ def compile_level_plan(net: Netlist,
         n_table_rows=n_table_rows,
         compact=bool(compact),
         store_rows_naive=naive_rows,
+        _net=net,
     )
     # always-on invariant check: a bad renumber is a silent wrong-label
     # disaster, so every freshly compiled plan is simulated once

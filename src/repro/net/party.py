@@ -36,6 +36,7 @@ cancel under reconstruction regardless of which party drew them.
 from __future__ import annotations
 
 import itertools
+import sys
 import threading
 import traceback
 from collections import deque
@@ -386,10 +387,15 @@ class EvaluatorEndpoint(_Endpoint):
             except TransportClosed:
                 return
             except Exception as e:  # report, then die loudly
+                # full traceback stays on THIS side only: exception reprs
+                # interpolate live values (shapes, array contents, key
+                # material in the worst case), so the peer gets just the
+                # class name — enough to correlate with the server log
+                traceback.print_exc(file=sys.stderr)
                 try:
                     self._send_control(
-                        "error", f"{type(e).__name__}: {e}\n"
-                                 f"{traceback.format_exc()}")
+                        "error", f"{type(e).__name__} "
+                                 f"(see evaluator-side log)")
                     # drain the peer's in-flight stream: closing a TCP
                     # socket with unread data RSTs the connection, which
                     # would discard the queued error frame before the
@@ -851,8 +857,9 @@ class GarblerEndpoint(_Endpoint):
         self._send_control("run", {"id": bundle_id})
 
         enc = SS.encode_fx(x, f, t)
-        xc = sh.run_rng.integers(0, t, enc.shape, dtype=np.uint64)
-        xs = SS.sub_mod(enc, xc, t)
+        # SS.share is the approved split: xs = enc − fresh one-time mask
+        # (draws the mask from run_rng exactly as the inline split did)
+        xc, xs = SS.share(sh.run_rng, enc, t)
         self._send_segs([W.Seg("input-share", W.DIR_C2S, W.pack_u64(xs))],
                         W.PHASE_ONLINE)
         regs: Dict[str, np.ndarray] = {"x": xc}

@@ -1,0 +1,49 @@
+"""Deliberately unhygienic jitted kernels — jit-hygiene linter fixture.
+
+Each function seeds one violation; ``tests/test_analysis.py`` asserts the
+linter reports all of them. Linted by path only, never imported (the AST
+walk does not execute the module, so the jax import is never resolved).
+"""
+
+import time
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def branchy(x):
+    if x > 0:  # Python branch on a traced value
+        return x
+    return -x
+
+
+def hosty(x):
+    y = np.sqrt(x)  # host numpy on a traced value inside a jitted body
+    return jnp.asarray(y)
+
+
+hosty_jit = jax.jit(hosty)
+
+
+@jax.jit
+def casty(x):
+    return float(x) * 2.0  # host cast forces concretization
+
+
+@jax.jit
+def timed(x):
+    t0 = time.time()  # wall clock inside a traced body
+    return x + t0
+
+
+def seeded(shape):
+    return np.random.rand(*shape)  # global RNG in a protocol-path module
+
+
+@jax.jit
+def clean(x, n, *, flavor="fast"):
+    # static_argnames branch and self-free attribute reads must stay quiet
+    return jnp.where(x > 0, x, -x) * n

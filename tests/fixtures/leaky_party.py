@@ -1,0 +1,55 @@
+"""Deliberately leaky protocol endpoint — secret-flow linter fixture.
+
+Each method seeds exactly one violation class; ``tests/test_analysis.py``
+asserts the linter reports every one of them with a file:line. This
+module is linted by path only and is never imported by the package.
+"""
+
+import logging
+import traceback
+
+import numpy as np
+
+log = logging.getLogger("leaky")
+
+
+class LeakyEndpoint:
+    def __init__(self, transport, gcirc, rng):
+        self.transport = transport
+        self.gcirc = gcirc
+        self.rng = rng
+
+    def leak_delta_to_wire(self):
+        # the FreeXOR offset: with R on the wire, every label pair decodes
+        self.transport.send(self.gcirc.r.tobytes())
+
+    def leak_mask_via_arith(self, t):
+        # taint must survive the arithmetic rewrite of the mask
+        masks = self.rng.integers(0, t, 8, dtype=np.uint64)
+        negated = (t - masks) % t
+        self.transport.send(negated.tobytes())
+
+    def leak_zero_labels_to_log(self):
+        log.info("wire zeros: %r", self.gcirc.input_zero)
+
+    def leak_param_in_exception(self, s_mask):
+        # parameter named like a secret field is secret by convention
+        raise RuntimeError(f"bad mask {s_mask!r}")
+
+    def leak_traceback_to_peer(self):
+        try:
+            self.step()
+        except Exception as e:  # noqa: BLE001 — fixture
+            self.transport.send(f"error: {e}\n{traceback.format_exc()}")
+
+    def send_tables_ok(self):
+        # public projection of a secret-holding object: must NOT be flagged
+        self.transport.send(self.gcirc.tables.tobytes())
+
+    def send_shared_ok(self, enc, t):
+        # approved masking API: must NOT be flagged
+        from repro.core import secret_sharing as SS
+
+        keep, send = SS.share(self.rng, enc, t)
+        self.transport.send(send.tobytes())
+        return keep

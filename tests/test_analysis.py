@@ -1,0 +1,414 @@
+"""Tests for the repro.analysis subsystem: structural verifier,
+dataflow passes, secret-flow/jit linters, CLI exit codes, baseline
+ratchet, and the hardened Bristol import path."""
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.analysis import (
+    Baseline,
+    Finding,
+    NetlistError,
+    analyze_netlist,
+    verify_netlist,
+    verify_netlist_strict,
+)
+from repro.analysis import cli as lint_cli
+from repro.analysis.jit_hygiene import run_jit_hygiene
+from repro.analysis.netcheck import generator_registry, run_netcheck
+from repro.analysis.secretflow import lint_file as sf_lint_file
+from repro.analysis.secretflow import run_secretflow
+from repro.core.circuits import bristol
+from repro.core.circuits.builder import CircuitBuilder
+from repro.core.netlist import Netlist, OP_AND, OP_INV, OP_XOR
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+FIXTURES = os.path.join(REPO, "tests", "fixtures")
+
+
+def _net(gates, num_wires, g_in=(), e_in=(), outputs=(), const_bits=None,
+         name="t"):
+    """Hand-build a raw Netlist from (op, in0, in1, out) tuples, bypassing
+    the builder's folding so adversarial structures survive."""
+    op = np.asarray([g[0] for g in gates], np.uint8)
+    return Netlist(
+        num_wires=num_wires,
+        op=op,
+        in0=np.asarray([g[1] for g in gates], np.int32),
+        in1=np.asarray([g[2] for g in gates], np.int32),
+        out=np.asarray([g[3] for g in gates], np.int32),
+        garbler_inputs=np.asarray(list(g_in), np.int32),
+        evaluator_inputs=np.asarray(list(e_in), np.int32),
+        outputs=np.asarray(list(outputs), np.int32),
+        const_bits=dict(const_bits or {}),
+        name=name,
+    )
+
+
+# ---------------------------------------------------------------------------
+# structural verifier: adversarial netlists
+# ---------------------------------------------------------------------------
+
+
+def test_verifier_accepts_all_generators():
+    for name, build in generator_registry().items():
+        errs = verify_netlist(build())
+        assert errs == [], f"{name}: {errs}"
+
+
+def test_verifier_cycle():
+    # gate 0 reads wire 3 which gate 1 drives later: not topological
+    net = _net([(OP_AND, 0, 3, 2), (OP_AND, 2, 1, 3)],
+               num_wires=4, g_in=[0], e_in=[1], outputs=[3])
+    errs = verify_netlist(net)
+    assert any("not topological" in e for e in errs)
+
+
+def test_verifier_dangling_wire():
+    net = _net([(OP_XOR, 0, 5, 2)],
+               num_wires=6, g_in=[0], e_in=[1], outputs=[2])
+    errs = verify_netlist(net)
+    assert any("dangling wire 5" in e for e in errs)
+
+
+def test_verifier_conflicting_const_bits():
+    # const wire driven by a gate AND const wire doubling as a party input
+    net = _net([(OP_XOR, 0, 1, 2)],
+               num_wires=3, g_in=[0], e_in=[1], outputs=[2],
+               const_bits={2: 1, 0: 0})
+    errs = verify_netlist(net)
+    assert any("const wire 2 is driven" in e for e in errs)
+    assert any("const wire 0 is also a party input" in e for e in errs)
+    bad_bit = _net([(OP_XOR, 0, 1, 3)], num_wires=4, g_in=[0], e_in=[1],
+                   outputs=[3], const_bits={2: 7})
+    assert any("not 0/1" in e for e in verify_netlist(bad_bit))
+
+
+def test_verifier_unreachable_output():
+    # wire 4 is computed from constants only and NOT declared const
+    net = _net([(OP_XOR, 0, 1, 3), (OP_AND, 2, 2, 4)],
+               num_wires=5, g_in=[0], e_in=[1], outputs=[3, 4],
+               const_bits={2: 1})
+    errs = verify_netlist(net)
+    assert any("output wire 4 is not reachable" in e for e in errs)
+    # ...but a *declared* const output is legitimate (post-fold residue)
+    ok = _net([(OP_XOR, 0, 1, 3)], num_wires=4, g_in=[0], e_in=[1],
+              outputs=[3, 2], const_bits={2: 1})
+    assert verify_netlist(ok) == []
+
+
+def test_verifier_duplicate_driver_and_undriven_output():
+    net = _net([(OP_XOR, 0, 1, 2), (OP_AND, 0, 1, 2)],
+               num_wires=4, g_in=[0], e_in=[1], outputs=[2, 3])
+    errs = verify_netlist(net)
+    assert any("duplicate driver" in e for e in errs)
+    assert any("output wire 3 is undriven" in e for e in errs)
+
+
+def test_verifier_bad_opcode_and_inv_arity():
+    bad_op = _net([(7, 0, 1, 2)], num_wires=3, g_in=[0], e_in=[1],
+                  outputs=[2])
+    assert any("op code 7" in e for e in verify_netlist(bad_op))
+    bad_inv = _net([(OP_INV, 0, 1, 2)], num_wires=3, g_in=[0], e_in=[1],
+                   outputs=[2])
+    assert any("INV requires in1 == in0" in e
+               for e in verify_netlist(bad_inv))
+
+
+def test_verify_strict_raises_netlist_error():
+    net = _net([(OP_XOR, 0, 5, 2)], num_wires=6, g_in=[0], e_in=[1],
+               outputs=[2])
+    with pytest.raises(NetlistError, match="dangling"):
+        verify_netlist_strict(net)
+    assert issubclass(NetlistError, ValueError)
+
+
+# ---------------------------------------------------------------------------
+# dataflow passes: golden counts on hand-built circuits
+# ---------------------------------------------------------------------------
+
+
+def test_dataflow_foldable_and_const():
+    # AND(x, const0) folds to 0; the XOR consuming it folds to alias
+    net = _net([(OP_AND, 0, 2, 3), (OP_XOR, 1, 3, 4)],
+               num_wires=5, g_in=[0], e_in=[1], outputs=[4],
+               const_bits={2: 0})
+    rep = analyze_netlist(net)
+    assert rep.foldable_gates == 2  # AND -> const0, XOR(e, 0) -> alias e
+    assert rep.foldable_and == 1
+    assert rep.removable_and == 1
+
+
+def test_dataflow_duplicate_and():
+    # two structurally identical ANDs (operand order swapped) -> one dup
+    net = _net([(OP_AND, 0, 1, 2), (OP_AND, 1, 0, 3),
+                (OP_XOR, 2, 3, 4)],
+               num_wires=5, g_in=[0], e_in=[1], outputs=[4])
+    rep = analyze_netlist(net)
+    assert rep.dup_and == 1
+    # ...and the XOR of two now-aliased values folds to const 0
+    assert rep.foldable_gates == 1
+    assert rep.removable_and == 1
+
+
+def test_dataflow_inv_cancellation():
+    # AND(x, INV(x)) == 0 through the negation lattice (token ^ 1)
+    net = _net([(OP_INV, 0, 0, 2), (OP_AND, 0, 2, 3), (OP_XOR, 1, 3, 4)],
+               num_wires=5, g_in=[0], e_in=[1], outputs=[4])
+    rep = analyze_netlist(net)
+    assert rep.foldable_and == 1
+    assert rep.removable_and == 1
+
+
+def test_dataflow_dead_gates_and_wires():
+    # gate 1 output (wire 3) is never read and is not an output: dead
+    net = _net([(OP_XOR, 0, 1, 2), (OP_AND, 0, 1, 3)],
+               num_wires=4, g_in=[0], e_in=[1], outputs=[2])
+    rep = analyze_netlist(net)
+    assert rep.dead_gates == 1
+    assert rep.dead_and == 1
+    assert rep.dead_wires == 1
+    assert rep.removable_and == 1
+
+
+def test_dataflow_clean_circuit_counts_zero():
+    net = _net([(OP_AND, 0, 1, 2), (OP_INV, 2, 2, 3)],
+               num_wires=4, g_in=[0], e_in=[1], outputs=[3])
+    rep = analyze_netlist(net)
+    assert rep.summary() == {
+        "dead_gates": 0, "dead_and": 0, "foldable_and": 0,
+        "dup_and": 0, "removable_and": 0, "dead_wires": 0,
+    }
+
+
+def test_dataflow_histograms():
+    cb = CircuitBuilder("h")
+    a = cb.g_input_word(8)
+    b = cb.e_input_word(8)
+    from repro.core.circuits import arith
+    cb.output(arith.add(cb, a, b))
+    net = cb.build()
+    rep = analyze_netlist(net, histograms=True)
+    assert rep.and_per_level.sum() == rep.and_gates
+    assert len(rep.live_per_level) == len(net.levels())
+    assert rep.live_per_level.max() > 0
+
+
+def test_stats_include_dataflow_counters():
+    net = generator_registry()["gelu"]()
+    st = net.stats()
+    for key in ("removable_and", "dead_gates", "dup_and", "dead_wires"):
+        assert key in st
+    # satellite 1: the shipped generators are clean after builder CSE/prune
+    assert st["removable_and"] == 0
+    assert st["dead_gates"] == 0
+
+
+def test_netcheck_pass_clean_on_shipped_generators():
+    assert run_netcheck() == []
+
+
+# ---------------------------------------------------------------------------
+# builder CSE + prune (the fixes the analyzer demanded)
+# ---------------------------------------------------------------------------
+
+
+def test_builder_cse_dedups_and():
+    cb = CircuitBuilder("cse")
+    a, b = cb.g_input(), cb.e_input()
+    w1 = cb.AND(a, b)
+    w2 = cb.AND(b, a)  # commuted duplicate
+    assert w1 == w2
+    assert cb.XOR(a, cb.INV(a)) == cb.constant(1)
+    assert cb.AND(a, cb.INV(a)) == cb.constant(0)
+
+
+def test_builder_prune_drops_dead_cone_preserving_semantics():
+    def build(prune):
+        cb = CircuitBuilder("p")
+        a = cb.g_input_word(8)
+        b = cb.e_input_word(8)
+        from repro.core.circuits import arith
+        s = arith.add(cb, a, b)
+        arith.mul(cb, a, b, style="conventional")  # dead cone
+        cb.output(s)
+        return cb.build(prune=prune)
+
+    pruned, full = build(True), build(False)
+    assert pruned.num_gates < full.num_gates
+    assert analyze_netlist(pruned).dead_gates == 0
+    rng = np.random.default_rng(7)
+    for _ in range(4):
+        ga = rng.integers(0, 2, 8).astype(np.uint8)
+        eb = rng.integers(0, 2, 8).astype(np.uint8)
+        assert np.array_equal(pruned.eval_plain(ga, eb),
+                              full.eval_plain(ga, eb))
+
+
+# ---------------------------------------------------------------------------
+# bristol import hardening
+# ---------------------------------------------------------------------------
+
+
+def test_bristol_roundtrip_verifies():
+    net = generator_registry()["add16"]()
+    back = bristol.parse(bristol.emit(net), name="rt")
+    rng = np.random.default_rng(3)
+    ga = rng.integers(0, 2, len(net.garbler_inputs)).astype(np.uint8)
+    eb = rng.integers(0, 2, len(net.evaluator_inputs)).astype(np.uint8)
+    assert np.array_equal(net.eval_plain(ga, eb), back.eval_plain(ga, eb))
+
+
+@pytest.mark.parametrize("text, match", [
+    ("1 3\n2 1 1\n1 1\n\n2 1 0 1 2 NAND\n", "unsupported gate"),
+    ("2 3\n2 1 1\n1 1\n\n2 1 0 1 2 AND\n", "promises 2 gates"),
+    ("1 3\n2 1 1\n1 1\n\n2 1 0 9 2 AND\n", "out of range"),
+    ("1 3\n2 1 1\n1 1\n\n1 1 0 1 2 AND\n", "AND gate must read"),
+    ("1 3\n2 1 1\n1 1\n\n2 1 0 x 2 AND\n", "non-integer"),
+    ("1 x\n2 1 1\n1 1\n\n2 1 0 1 2 AND\n", "non-integer"),
+    ("1 3\n2 1\n1 1\n\n2 1 0 1 2 AND\n", "input header"),
+    ("", ">= 3 header lines"),
+])
+def test_bristol_malformed_raises_value_error(text, match):
+    with pytest.raises(ValueError, match=match):
+        bristol.parse(text, name="bad")
+
+
+def test_bristol_structural_check_catches_nontopological():
+    # header/arity fine, but the gate list reads a wire driven later
+    text = "2 5\n2 1 1\n1 1\n\n2 1 0 3 4 AND\n2 1 0 1 3 XOR\n"
+    with pytest.raises(ValueError, match="not topological"):
+        bristol.parse(text, name="cyc")
+    # verify=False must let the same text through for adversarial callers
+    net = bristol.parse(text, name="cyc", verify=False)
+    assert net.num_gates == 2
+
+
+# ---------------------------------------------------------------------------
+# secret-flow linter
+# ---------------------------------------------------------------------------
+
+
+def test_secretflow_catches_seeded_leaks():
+    path = os.path.join(FIXTURES, "leaky_party.py")
+    findings = sf_lint_file(path, rel="tests/fixtures/leaky_party.py")
+    rules = {(f.rule, f.symbol.rsplit(".", 1)[-1]) for f in findings}
+    assert ("secret-to-wire", "leak_delta_to_wire") in rules
+    assert ("secret-to-wire", "leak_mask_via_arith") in rules
+    assert ("secret-to-log", "leak_zero_labels_to_log") in rules
+    assert ("secret-to-exception", "leak_param_in_exception") in rules
+    assert ("exc-to-wire", "leak_traceback_to_peer") in rules
+    # every finding carries a usable location
+    assert all(f.line > 0 and f.path.endswith("leaky_party.py")
+               for f in findings)
+    # the deliberately-clean methods stay quiet
+    flagged = {f.symbol.rsplit(".", 1)[-1] for f in findings}
+    assert "send_tables_ok" not in flagged
+    assert "send_shared_ok" not in flagged
+
+
+def test_secretflow_quiet_on_shipped_protocol_paths():
+    assert run_secretflow(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# jit-hygiene linter
+# ---------------------------------------------------------------------------
+
+
+def test_jit_hygiene_catches_seeded_violations():
+    path = os.path.join(FIXTURES, "bad_jit.py")
+    findings = run_jit_hygiene(REPO, jit_paths=[path], proto_paths=[path])
+    rules = {f.rule for f in findings}
+    assert {"jit-py-branch", "jit-host-np", "jit-host-cast",
+            "jit-time-random", "proto-global-rng"} <= rules
+    symbols = {f.symbol.rsplit(".", 1)[-1] for f in findings}
+    assert "clean" not in symbols
+
+
+def test_jit_hygiene_quiet_on_shipped_kernels():
+    assert run_jit_hygiene(REPO) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline ratchet + CLI
+# ---------------------------------------------------------------------------
+
+
+def _leaky_findings():
+    return sf_lint_file(os.path.join(FIXTURES, "leaky_party.py"),
+                        rel="tests/fixtures/leaky_party.py")
+
+
+def test_baseline_accepts_and_ratchets(tmp_path):
+    findings = _leaky_findings()
+    doc = Baseline.from_findings(findings, reason="fixture")
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps(doc))
+    base = Baseline.load(str(p))
+    assert all(base.accepts(f) for f in findings)
+    # growth past the baselined count is NOT accepted
+    f = findings[0]
+    grown = Finding(f.tool, f.rule, f.path, f.line, f.symbol, f.message,
+                    count=f.count + 1)
+    assert not base.accepts(grown)
+    # entries without an explicit reason are rejected at load time
+    del doc["findings"][0]["reason"]
+    p.write_text(json.dumps(doc))
+    with pytest.raises(ValueError, match="reason"):
+        Baseline.load(str(p))
+
+
+def test_cli_exit_codes(tmp_path, capsys):
+    leaky = os.path.join(FIXTURES, "leaky_party.py")
+    # clean tree passes
+    assert lint_cli.main(["--netlists", "--root", REPO]) == 0
+    capsys.readouterr()
+    # seeded violations fail with file:line renderings
+    rc = lint_cli.main(["--secretflow", "--root", REPO, leaky])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "leaky_party.py:" in out and "secret-to-wire" in out
+    # --json emits machine-readable findings
+    rc = lint_cli.main(["--secretflow", "--json", "--root", REPO, leaky])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert doc["new"] and all("rule" in f for f in doc["findings"])
+    # a baseline accepting those findings flips the exit back to 0
+    bpath = tmp_path / "base.json"
+    rc = lint_cli.main(["--secretflow", "--root", REPO, "--baseline",
+                        str(bpath), "--update-baseline", leaky])
+    assert rc == 0
+    capsys.readouterr()
+    rc = lint_cli.main(["--secretflow", "--root", REPO, "--baseline",
+                        str(bpath), leaky])
+    assert rc == 0
+    capsys.readouterr()
+    # missing baseline file is a hard error, not a silent pass
+    assert lint_cli.main(["--secretflow", "--root", REPO, "--baseline",
+                          str(tmp_path / "absent.json"), leaky]) == 2
+    capsys.readouterr()
+
+
+def test_cli_module_entrypoint():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--netlists",
+         "--root", REPO],
+        capture_output=True, text=True, env=env, cwd=REPO)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+def test_checked_in_baseline_matches_clean_tree():
+    # the CI contract: the shipped tree with the shipped baseline is green
+    base = Baseline.load(os.path.join(REPO, "analysis", "baseline.json"))
+    assert base.entries == {}  # nothing grandfathered on the shipped tree
+    assert lint_cli.main(
+        ["--secretflow", "--jit", "--root", REPO, "--baseline",
+         "analysis/baseline.json"]) == 0
