@@ -2,7 +2,7 @@
 end-to-end private inference over real transports vs the metered-sim
 prediction.
 
-Three measurements per transport (``InProcPipe``, loopback TCP):
+Measurements per transport (``InProcPipe``, loopback TCP):
 
 * **parity** — the revealed output must be bit-identical to the
   in-process ``PiTSession.run`` path, and the per-phase wire ledger
@@ -16,6 +16,9 @@ Three measurements per transport (``InProcPipe``, loopback TCP):
   bandwidth-shaped refill streams in the background; the benchmark
   records that the online request completed while refill traffic was in
   flight.
+* **gateway** — N concurrent client sessions behind one ``PitGateway``
+  accept loop: sessions served, shared-garbling-cache hits (one slab
+  per distinct netlist for all clients), aggregate bundles/sec.
 
 ``python benchmarks/bench_net.py`` writes ``BENCH_net.json`` at the repo
 root; ``--smoke`` (CI / ``benchmarks/run.py``) runs the tiny config and
@@ -82,10 +85,10 @@ def _endpoints(model, cfg, kind):
         cli = GarblerEndpoint(a, seed=7, impl="ref", timeout=600)
         return cli, srv, lambda: cli.close()
     lst = TcpListener()
-    th = srv.serve_tcp(lst, accept_timeout=60, timeout=600)
+    loop = srv.serve_tcp(lst, timeout=600)
     cli = GarblerEndpoint(TcpTransport.connect("127.0.0.1", lst.port),
                           seed=7, impl="ref", timeout=600)
-    th.join(timeout=60)
+    loop.wait_accepted(1, timeout=60)
 
     def cleanup():
         cli.close()
@@ -176,6 +179,62 @@ def _pipelined(model, cfg, x, y_ref):
     }
 
 
+def _gateway(model, cfg, x, y_ref, n_clients=3):
+    """Multi-client gateway point: N concurrent TCP sessions behind one
+    accept loop, every output bit-identical, one garbled slab per
+    distinct netlist shared across all of them."""
+    import threading as th_mod
+
+    from repro.net import TcpListener
+    from repro.serve import PitGateway, gateway_client
+
+    gw = PitGateway(model, cfg["S"], impl="ref", max_sessions=n_clients,
+                    pool_cap=4)
+    lst = TcpListener()
+    loop = gw.serve_listener(lst, accept_timeout=0.2, timeout=600)
+    outs = [None] * n_clients
+    t0 = time.perf_counter()
+
+    def client(i):
+        eng = gateway_client("127.0.0.1", lst.port, seed=100 + i,
+                             timeout=600)
+        try:
+            eng.preprocess(1)
+            outs[i] = eng.run(x)
+        finally:
+            eng.close()
+
+    threads = [th_mod.Thread(target=client, args=(i,))
+               for i in range(n_clients)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=600)
+    elapsed = time.perf_counter() - t0
+    for i, y in enumerate(outs):
+        assert y is not None and np.array_equal(y, y_ref), \
+            f"gateway: session {i} diverged from the in-process session"
+    st = gw.stats()
+    cache = st["garbling_cache"]
+    assert cache["slabs"] == cache["distinct_netlists"], \
+        "gateway: more than one garbled slab per distinct netlist"
+    loop.stop()
+    gw.close()
+    lst.close()
+    return {
+        "clients": n_clients,
+        "sessions_served": st["sessions_admitted"],
+        "sessions_shed": st["sessions_shed"],
+        "bundles_consumed": st["bundles_consumed"],
+        "aggregate_bundles_per_s": round(st["bundles_consumed"]
+                                         / max(elapsed, 1e-9), 3),
+        "elapsed_s": round(elapsed, 3),
+        "shared_cache_slabs": cache["slabs"],
+        "shared_cache_hits": cache["hits"],
+        "shared_cache_misses": cache["misses"],
+    }
+
+
 def run(cfg, write=print):
     model = _model(cfg)
     rng = np.random.default_rng(1)
@@ -195,8 +254,14 @@ def run(cfg, write=print):
     write(f"net[pipelined],{pipe['serve_s'] * 1e6:.0f},"
           f"online-during-refill="
           f"{pipe['online_completed_while_refill_in_flight']}")
+    gw = _gateway(model, cfg, x, y_ref)
+    write(f"net[gateway],{gw['elapsed_s'] * 1e6:.0f},"
+          f"{gw['sessions_served']} sessions "
+          f"{gw['aggregate_bundles_per_s']} bundles/s "
+          f"cache {gw['shared_cache_slabs']} slabs/"
+          f"{gw['shared_cache_hits']} hits")
     return {"config": cfg, "oracle": oracle, "points": points,
-            "pipelined": pipe}
+            "pipelined": pipe, "gateway": gw}
 
 
 def full():
@@ -219,6 +284,7 @@ def main() -> None:
     res = run(SMOKE)
     assert all(p["ledger_matches_oracle"] for p in res["points"])
     assert res["pipelined"]["online_completed_while_refill_in_flight"]
+    assert res["gateway"]["sessions_served"] == res["gateway"]["clients"]
 
 
 if __name__ == "__main__":

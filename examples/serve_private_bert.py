@@ -80,13 +80,10 @@ def serve_two_party(model, args, rng):
     srv = PitNetServer(model, args.seq, impl="ref")
     if args.net == "tcp":
         lst = TcpListener()
-        accepts = [srv.serve_tcp(lst, accept_timeout=60, timeout=600,
-                                 name=f"pit-eval-{n}")
-                   for n in ("offline", "online")]
+        loop = srv.serve_tcp(lst, timeout=600, max_conns=2)
         off_c = TcpTransport.connect("127.0.0.1", lst.port)
         on_c = TcpTransport.connect("127.0.0.1", lst.port)
-        for th in accepts:
-            th.join(timeout=60)
+        loop.wait_accepted(2, timeout=60)
         print(f"two-party over loopback TCP (port {lst.port})")
     else:
         off_c, off_s = InProcPipe.make_pair()

@@ -1,6 +1,7 @@
 """CI smoke: GarblerEndpoint ↔ EvaluatorEndpoint end-to-end over loopback
-TCP on a tiny model, with a hard timeout so a deadlocked socket fails the
-build fast instead of hanging the runner.
+TCP on a tiny model, plus a multi-client PitGateway pass (two concurrent
+sessions, one killed mid-session), with a hard timeout so a deadlocked
+socket fails the build fast instead of hanging the runner.
 
     PYTHONPATH=src python scripts/net_smoke.py [--timeout 180]
 """
@@ -48,10 +49,10 @@ def main() -> int:
     t0 = time.perf_counter()
     srv = PitNetServer(model, S, impl="ref")
     lst = TcpListener()
-    th = srv.serve_tcp(lst, accept_timeout=30, timeout=120)
+    loop = srv.serve_tcp(lst, timeout=120)
     cli = GarblerEndpoint(TcpTransport.connect("127.0.0.1", lst.port),
                           seed=7, impl="ref", timeout=120)
-    th.join(timeout=30)
+    assert loop.wait_accepted(1, timeout=30), "server never accepted"
 
     cli.preprocess(1)
     x = rng.normal(0, 1, (S, D))
@@ -76,6 +77,38 @@ def main() -> int:
           f"({led.offline.total / 1e6:.1f} MB offline / "
           f"{led.online.total / 1e6:.2f} MB online), max|err|={err:.4f}",
           flush=True)
+
+    # -- gateway: 2 concurrent sessions behind one accept loop, one
+    # killed mid-session with a bundle outstanding --------------------
+    from repro.serve import PitGateway, gateway_client
+
+    t1 = time.perf_counter()
+    gw = PitGateway(model, S, impl="ref", max_sessions=4, pool_cap=4)
+    glst = TcpListener()
+    gloop = gw.serve_listener(glst, accept_timeout=0.2, timeout=120)
+    e1 = gateway_client("127.0.0.1", glst.port, seed=1, timeout=120)
+    e2 = gateway_client("127.0.0.1", glst.port, seed=2, timeout=120)
+    e1.preprocess(2)  # one to run, one to strand on the kill
+    e2.preprocess(1)
+    assert np.array_equal(e1.run(x), y_ref), "gateway session 1 diverged"
+    e1.offline.transport.close()  # kill: no bye, bundle outstanding
+    e1.online.transport.close()
+    deadline = time.monotonic() + 30
+    while gw.stats()["sessions_active"] != 1:
+        assert time.monotonic() < deadline, "victim session never reclaimed"
+        time.sleep(0.05)
+    assert np.array_equal(e2.run(x), y_ref), "survivor session diverged"
+    gst = gw.stats()
+    assert gst["bundles_returned"] == 1, gst["bundles_returned"]
+    cache = gst["garbling_cache"]
+    e2.close()
+    gloop.stop()
+    gw.close()
+    glst.close()
+    print(f"gateway smoke OK in {time.perf_counter() - t1:.1f}s: "
+          f"2 sessions muxed, mid-session kill returned "
+          f"{gst['bundles_returned']} bundle, shared cache "
+          f"{cache['slabs']} slabs / {cache['hits']} hits", flush=True)
     signal.alarm(0)
     return 0
 

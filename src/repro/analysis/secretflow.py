@@ -72,6 +72,8 @@ DEFAULT_PATHS = (
     "src/repro/net/party.py",
     "src/repro/net/wire.py",
     "src/repro/serve/__init__.py",
+    "src/repro/serve/errors.py",
+    "src/repro/serve/gateway.py",
     "src/repro/serve/private_engine.py",
 )
 

@@ -23,6 +23,7 @@ secure — so ``run`` raises :class:`BundleExhausted` on reuse.
 from __future__ import annotations
 
 import itertools
+import threading
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
@@ -65,6 +66,76 @@ def gc_net_for(protocol: PiTProtocol, op: OpSpec) -> Netlist:
             return p.layernorm_reduced_net(n, op.in_scale)
         return p.layernorm_full_net(n, op.in_scale)
     raise ValueError(op.kind)
+
+
+class GarblingCache:
+    """Observable shared-garbling-cache keying: ``(netlist, instances,
+    impl)`` → one slab structure, however many sessions use it.
+
+    The expensive artifacts behind a GC op are the generated
+    :class:`Netlist` (circuit generation is seconds-scale for production
+    rows) and the compiled executor walk :mod:`repro.core.gc_exec` keys
+    on ``(netlist, instances, impl)``. Both hang off ONE protocol
+    instance's netlist cache — so a multi-client gateway that shares one
+    protocol across all sessions garbles/compiles each distinct slab
+    once and serves it to every client. This wrapper makes that sharing
+    *observable and thread-safe*: every resolution goes through one lock
+    (two sessions racing a first build would otherwise construct the
+    netlist twice via the protocol's bare check-then-set cache), counts
+    a miss the first time a key is seen and a hit on every reuse.
+    """
+
+    def __init__(self, protocol: PiTProtocol):
+        self.protocol = protocol
+        self._lock = threading.Lock()
+        self._slabs: Dict[Tuple[str, int, str], int] = {}  # key -> uses
+        self.hits = 0
+        self.misses = 0
+
+    def distinct_nets(self, plan: Plan, n: int = 1
+                      ) -> Tuple[Dict[str, Netlist], Dict[str, int]]:
+        """Resolve every GC op's netlist for an ``n``-bundle slab batch.
+
+        Returns netlists in first-appearance order plus per-request
+        instance totals (the garbler's slab widths are ``per_req[name] *
+        n``). The whole walk holds the cache lock so concurrent first
+        resolutions from two sessions cannot double-build a netlist, and
+        each distinct slab key counts one hit/miss per call.
+        """
+        with self._lock:
+            nets: Dict[str, Netlist] = {}
+            per_req: Dict[str, int] = {}
+            for op in plan.ops:
+                if op.kind in GC_KINDS:
+                    net = gc_net_for(self.protocol, op)
+                    per_req[net.name] = (per_req.get(net.name, 0)
+                                         + plan.gc_instances(op))
+                    nets.setdefault(net.name, net)
+            for name in nets:
+                key = (name, per_req[name] * n, self.protocol.impl)
+                if key in self._slabs:
+                    self.hits += 1
+                else:
+                    self.misses += 1
+                    self._slabs[key] = 0
+                self._slabs[key] += 1
+            return nets, per_req
+
+    @property
+    def distinct_netlists(self) -> int:
+        with self._lock:
+            return len({name for name, _, _ in self._slabs})
+
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            return {
+                "slabs": len(self._slabs),
+                "distinct_netlists": len({n for n, _, _ in self._slabs}),
+                "hits": self.hits,
+                "misses": self.misses,
+                "by_key": {f"{n}/I{i}/{im}": uses
+                           for (n, i, im), uses in sorted(self._slabs.items())},
+            }
 
 
 @dataclass

@@ -16,18 +16,26 @@ transport:
                     (the in-process simulation is the oracle)
 """
 
-from repro.net.transport import InProcPipe, TcpListener, TcpTransport, Transport
+from repro.net.transport import (
+    AcceptLoop,
+    InProcPipe,
+    TcpListener,
+    TcpTransport,
+    Transport,
+)
 from repro.net.wire import WIRE_VERSION, Msg, Seg, decode_frame, encode_msg
 from repro.net.party import (
     EvaluatorEndpoint,
     GarblerEndpoint,
     NetProtocolError,
     PitNetServer,
+    SessionState,
+    WireLedger,
 )
 
 __all__ = [
-    "Transport", "InProcPipe", "TcpTransport", "TcpListener",
+    "Transport", "InProcPipe", "TcpTransport", "TcpListener", "AcceptLoop",
     "WIRE_VERSION", "Msg", "Seg", "encode_msg", "decode_frame",
     "GarblerEndpoint", "EvaluatorEndpoint", "PitNetServer",
-    "NetProtocolError",
+    "SessionState", "WireLedger", "NetProtocolError",
 ]

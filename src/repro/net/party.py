@@ -38,7 +38,9 @@ from __future__ import annotations
 import itertools
 import sys
 import threading
+import time
 import traceback
+import uuid
 from collections import deque
 from dataclasses import asdict, dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
@@ -68,9 +70,10 @@ from repro.core.protocol import (
     bits_of,
     words_from_bits,
 )
-from repro.core.session import gc_net_for
+from repro.core.session import GarblingCache, gc_net_for
 from repro.net import wire as W
 from repro.net.transport import Transport, TransportClosed
+from repro.serve.errors import BundlePoolEmpty
 
 
 class NetProtocolError(RuntimeError):
@@ -143,6 +146,25 @@ class WireLedger:
         with self._mutex:
             self.control_bytes += nbytes
 
+    def absorb(self, other: "WireLedger") -> None:
+        """Fold another ledger's counters into this one (a gateway
+        endpoint meters its pre-hello frames on a provisional ledger,
+        then transfers them to the session it resolves to)."""
+        with self._mutex, other._mutex:
+            for phase_ch, o_ch in ((self.offline, other.offline),
+                                   (self.online, other.online)):
+                for tag, n in o_ch.by_tag.items():
+                    phase_ch.by_tag[tag] = phase_ch.by_tag.get(tag, 0) + n
+                phase_ch.client_to_server += o_ch.client_to_server
+                phase_ch.server_to_client += o_ch.server_to_client
+                phase_ch.rounds += o_ch.rounds
+            self.sim_bytes += other.sim_bytes
+            self.control_bytes += other.control_bytes
+            self.frame_bytes += other.frame_bytes
+            self.dir_flips += other.dir_flips
+            if other._last_io:
+                self._last_io = other._last_io
+
     def summary(self) -> Dict[str, object]:
         return {
             "offline_bytes": self.offline.total,
@@ -163,9 +185,18 @@ def _gc_geom(net: Netlist, k: int) -> Tuple[int, int, int]:
     return n_out_bits // k, xc_bits, len(net.evaluator_inputs)
 
 
-def _distinct_nets(protocol: PiTProtocol, plan: Plan
+def _distinct_nets(protocol: PiTProtocol, plan: Plan, *, n: int = 1,
+                   cache: Optional[GarblingCache] = None
                    ) -> Tuple[Dict[str, Netlist], Dict[str, int]]:
-    """Netlists in first-appearance order + per-request instance totals."""
+    """Netlists in first-appearance order + per-request instance totals.
+
+    With ``cache`` (the server side of a multi-session gateway), netlist
+    resolution routes through the shared :class:`GarblingCache`, counted
+    per distinct slab — ``n`` is the bundle batch size, so the slab key
+    matches the ``instances`` the garbler actually ships.
+    """
+    if cache is not None:
+        return cache.distinct_nets(plan, n)
     nets: Dict[str, Netlist] = {}
     per_req: Dict[str, int] = {}
     for op in plan.ops:
@@ -242,6 +273,15 @@ class _Endpoint:
             self.ledger.add_control(len(frame))
             if msg.tag == "error":
                 raise NetProtocolError(f"peer error: {msg.payload}")
+            if msg.tag == "shed":
+                # typed load-shed frame, never an exception string: the
+                # peer stays healthy, we back off for the hinted time
+                p = msg.payload if isinstance(msg.payload, dict) else {}
+                raise BundlePoolEmpty(
+                    f"peer shed load (scope={p.get('scope', 'pool')}): "
+                    f"retry after {p.get('retry_after_s')}s",
+                    retry_after_s=p.get("retry_after_s"),
+                    scope=str(p.get("scope", "pool")))
         return msg
 
     def _expect_seg(self, tag: str) -> bytes:
@@ -279,10 +319,73 @@ class _Endpoint:
 # ---------------------------------------------------------------------------
 
 
+class SessionState:
+    """One client relationship's server-side state: a private bundle-id
+    namespace, its own :class:`WireLedger`, and rate/byte accounting.
+
+    ``PitNetServer`` owns exactly one (every endpoint pair serves the
+    same client); ``PitGateway`` (:mod:`repro.serve.gateway`) mints one
+    per admitted client and binds each accepted transport to the session
+    its hello names — bundle ids from different clients can no longer
+    collide, which is what let the old server refuse a second client.
+    """
+
+    def __init__(self, sid: int = 0, client: str = "local"):
+        self.sid = sid
+        self.client = client
+        self.lock = threading.Lock()  # bundle store
+        self.bundles: Dict[int, Dict[str, dict]] = {}
+        self.ledger = WireLedger()
+        self.endpoints = 0  # live transports bound to this session
+        self.created_s = time.perf_counter()
+        # accounting (mutated under ``lock``)
+        self.prep_requests = 0
+        self.run_requests = 0
+        self.bundles_prepped = 0
+        self.bundles_consumed = 0
+        self.bundles_returned = 0
+        self.sheds = 0
+
+    def outstanding(self) -> int:
+        with self.lock:
+            return len(self.bundles)
+
+    def summary(self) -> Dict[str, object]:
+        """Per-session rate/byte accounting on top of the wire ledger."""
+        dt = max(time.perf_counter() - self.created_s, 1e-9)
+        led = self.ledger.summary()
+        with self.lock:
+            out = {
+                "sid": self.sid,
+                "client": self.client,
+                "prep_requests": self.prep_requests,
+                "run_requests": self.run_requests,
+                "bundles_prepped": self.bundles_prepped,
+                "bundles_consumed": self.bundles_consumed,
+                "bundles_returned": self.bundles_returned,
+                "bundles_outstanding": len(self.bundles),
+                "sheds": self.sheds,
+                "elapsed_s": round(dt, 3),
+                "runs_per_s": round(self.run_requests / dt, 3),
+                "bytes_per_s": round(led["frame_bytes"] / dt, 1),
+            }
+        out.update(led)
+        return out
+
+
 class ServerShared:
-    """Weight-owner state shared by all evaluator endpoints of a server
-    (the pipelined mode runs one endpoint per transport — a dedicated
-    offline pair and an online pair — over one bundle store)."""
+    """Weight-owner state shared by all evaluator endpoints of a server.
+
+    Two axes of sharing: the pipelined mode runs one endpoint per
+    transport (a dedicated offline pair and an online pair) over one
+    bundle store, and the gateway runs N client *sessions* over one
+    model/protocol. Everything here is session-invariant — the plan, the
+    protocol (whose netlist cache IS the shared garbling cache, made
+    observable by ``gc_cache``), quantized weights, LN parameters — while
+    per-client state (bundle namespace, ledger, accounting) lives in
+    :class:`SessionState`. ``session`` is the default single-client
+    namespace that ``PitNetServer`` endpoints use.
+    """
 
     def __init__(self, model, seq_len: int, *, impl: str = "ref",
                  seed: int = 104729):
@@ -290,26 +393,41 @@ class ServerShared:
         self.impl = impl
         self.plan = compile_plan(model, seq_len)
         self.protocol = PiTProtocol(model.p.pcfg, seed=seed, impl=impl)
+        self.gc_cache = GarblingCache(self.protocol)
         self.rng = np.random.default_rng(seed)
         self.rng_lock = threading.Lock()
-        self.lock = threading.Lock()  # bundle store
-        self.bundles: Dict[int, Dict[str, dict]] = {}
-        self.ledger = WireLedger()
+        self.session = SessionState()
+        self._weight_lock = threading.Lock()
         self._quantized: Dict[str, tuple] = {}
         self._ln_cache: Dict[str, dict] = {}
 
-    # -- weight access (mirrors PiTSession) ----------------------------
-    def weight_mod(self, op: OpSpec) -> np.ndarray:
-        if op.name not in self._quantized:
-            Wt = self.model.weights[op.attrs["layer"]]
-            w = getattr(Wt, op.attrs["weight"])
-            scale = op.attrs.get("wscale", 1.0)
-            if scale != 1.0:
-                w = w * scale
-            self._quantized[op.name] = self.protocol.quantize_weight(w)
-        return self._quantized[op.name][1]
+    # default-session views (the pre-gateway single-client API)
+    @property
+    def lock(self) -> threading.Lock:
+        return self.session.lock
 
-    def ln_params(self, op: OpSpec) -> dict:
+    @property
+    def bundles(self) -> Dict[int, Dict[str, dict]]:
+        return self.session.bundles
+
+    @property
+    def ledger(self) -> WireLedger:
+        return self.session.ledger
+
+    # -- weight access (mirrors PiTSession; locked: gateway sessions
+    # race the first resolution from N endpoint threads) ---------------
+    def weight_mod(self, op: OpSpec) -> np.ndarray:
+        with self._weight_lock:
+            if op.name not in self._quantized:
+                Wt = self.model.weights[op.attrs["layer"]]
+                w = getattr(Wt, op.attrs["weight"])
+                scale = op.attrs.get("wscale", 1.0)
+                if scale != 1.0:
+                    w = w * scale
+                self._quantized[op.name] = self.protocol.quantize_weight(w)
+            return self._quantized[op.name][1]
+
+    def _ln_params_locked(self, op: OpSpec) -> dict:
         if op.name not in self._ln_cache:
             p = self.protocol
             Wt = self.model.weights[op.attrs["layer"]]
@@ -326,6 +444,10 @@ class ServerShared:
                                    ).astype(np.int64),
             }
         return self._ln_cache[op.name]
+
+    def ln_params(self, op: OpSpec) -> dict:
+        with self._weight_lock:
+            return self._ln_params_locked(op)
 
     def hello_payload(self) -> dict:
         p = self.protocol
@@ -350,13 +472,16 @@ class EvaluatorEndpoint(_Endpoint):
     def __init__(self, transport: Transport, *, model=None,
                  seq_len: Optional[int] = None,
                  shared: Optional[ServerShared] = None, impl: str = "ref",
-                 timeout: Optional[float] = None):
+                 timeout: Optional[float] = None,
+                 session: Optional[SessionState] = None):
         if shared is None:
             if model is None or seq_len is None:
                 raise ValueError("need model+seq_len or a ServerShared")
             shared = ServerShared(model, seq_len, impl=impl)
-        super().__init__(transport, timeout=timeout, ledger=shared.ledger)
+        session = session or shared.session
+        super().__init__(transport, timeout=timeout, ledger=session.ledger)
         self.shared = shared
+        self.session = session
 
     # ------------------------------------------------------------------
     def serve_forever(self) -> None:
@@ -364,7 +489,20 @@ class EvaluatorEndpoint(_Endpoint):
 
         Errors are reported to the peer as a CONTROL ``error`` frame and
         re-raised (the endpoint thread dies loudly — a deadlocked or
-        diverged session must never hang silently)."""
+        diverged session must never hang silently). ``_on_disconnect``
+        runs on every exit — normal bye, peer vanishing mid-exchange, or
+        an error — so session owners (the gateway) can reclaim state.
+        """
+        try:
+            self._serve_loop()
+        finally:
+            self._on_disconnect()
+
+    def _on_disconnect(self) -> None:
+        """Hook: the transport is done (bye, close or error). Base
+        endpoints have nothing to reclaim."""
+
+    def _serve_loop(self) -> None:
         while True:
             try:
                 msg = self._recv_frame()
@@ -418,27 +556,54 @@ class EvaluatorEndpoint(_Endpoint):
             raise NetProtocolError(
                 f"wire version mismatch: peer {payload.get('version')}, "
                 f"ours {W.WIRE_VERSION}")
-        self._send_control("hello-ok", self.shared.hello_payload())
+        extra = self._on_hello(payload)
+        self._send_control("hello-ok",
+                           {**self.shared.hello_payload(), **extra})
+
+    def _on_hello(self, payload) -> dict:
+        """Hook: inspect the client hello (id/token), return extra
+        hello-ok fields. The gateway resolves the session here; the
+        single-client server just names its one session."""
+        return {"session": self.session.sid}
+
+    def _admit_prep(self, n: int) -> Optional[float]:
+        """Hook: admission control for ``n`` more bundles. Return None to
+        admit, or a retry-after hint (seconds) to shed. The base server
+        has no bound — bounded pools are gateway policy."""
+        return None
 
     # ------------------------------------------------------------------
     # offline: receive the garbling stream, deal server-side material
     # ------------------------------------------------------------------
     def _handle_prep(self, payload) -> None:
         sh = self.shared
+        sess = self.session
         p = sh.protocol
         plan = sh.plan
         t, k = p.t, p.k
         n = int(payload["n"])
         ids = [int(i) for i in payload["ids"]]
-        with sh.lock:
-            dup = sorted(set(ids) & set(sh.bundles))
+        hint = self._admit_prep(n)
+        if hint is not None:
+            # bounded pool: typed CONTROL shed with a retry-after hint —
+            # the client has garbled nothing yet, so nothing is wasted
+            with sess.lock:
+                sess.sheds += 1
+            self._send_control("shed",
+                               {"retry_after_s": hint, "scope": "prep"})
+            return
+        with sess.lock:
+            dup = sorted(set(ids) & set(sess.bundles))
+            sess.prep_requests += 1
         if dup or len(set(ids)) != n:
-            # refuse rather than corrupt: a second client process reusing
-            # ids would silently swap tables under the first one's labels
-            # (multi-client id namespaces are a ROADMAP follow-up)
+            # refuse rather than corrupt: a client reusing ids within its
+            # own session would silently swap tables under the first
+            # use's labels (ids are per-session — a *different* client's
+            # ids live in a different SessionState namespace)
             raise NetProtocolError(
-                f"bundle ids {dup or ids} already exist on this server")
-        nets, per_req = _distinct_nets(p, plan)
+                f"bundle ids {dup or ids} already exist in this session")
+        self._send_control("prep-ok", {"n": n})
+        nets, per_req = _distinct_nets(p, plan, n=n, cache=sh.gc_cache)
 
         slabs: Dict[str, dict] = {}
         for name, net in nets.items():
@@ -509,8 +674,9 @@ class EvaluatorEndpoint(_Endpoint):
                                 0, t, I_ln, dtype=np.uint64)
             new_bundles[bid] = parts
         self._send_segs(resp, W.PHASE_OFFLINE)
-        with sh.lock:
-            sh.bundles.update(new_bundles)
+        with sess.lock:
+            sess.bundles.update(new_bundles)
+            sess.bundles_prepped += n
         self._send_control("prep-done", {"n": n, "ids": ids})
 
     # ------------------------------------------------------------------
@@ -518,12 +684,16 @@ class EvaluatorEndpoint(_Endpoint):
     # ------------------------------------------------------------------
     def _handle_run(self, payload) -> None:
         sh = self.shared
+        sess = self.session
         p = sh.protocol
         plan = sh.plan
         t = p.t
         bid = int(payload["id"])
-        with sh.lock:
-            sparts = sh.bundles.pop(bid, None)
+        with sess.lock:
+            sparts = sess.bundles.pop(bid, None)
+            if sparts is not None:
+                sess.run_requests += 1
+                sess.bundles_consumed += 1
         if sparts is None:
             raise NetProtocolError(
                 f"bundle {bid} unknown or already consumed on the server")
@@ -670,17 +840,29 @@ class ClientShared:
         self.bundles: Dict[int, Dict[str, dict]] = {}
         self.order: Deque[int] = deque()
         self.ledger = WireLedger()
+        # both endpoints of a pair send the same token, so a gateway can
+        # bind them to ONE session/bundle namespace (uuid: two clients
+        # with the same seed must still be distinct sessions)
+        self.client_token = f"c{seed}-{uuid.uuid4().hex[:12]}"
+        self.session_id: Optional[int] = None
 
     def adopt_hello(self, payload: dict) -> None:
+        sid = payload.get("session")
         with self.lock:
             if self.plan is not None:  # second endpoint of a pair
                 if plan_to_spec(self.plan) != payload["plan"]:
                     raise NetProtocolError(
                         "offline/online endpoints saw different plans")
+                if sid != self.session_id:
+                    raise NetProtocolError(
+                        f"offline/online endpoints landed in different "
+                        f"sessions ({self.session_id} vs {sid}) — did the "
+                        f"hellos carry the same client token?")
                 return
             pcfg = PrivacyConfig(**payload["pcfg"])
             self.protocol = PiTProtocol(pcfg, seed=self.seed)
             self.plan = plan_from_spec(payload["plan"])
+            self.session_id = sid
             self.ln_gq = {k: np.asarray(v, np.uint64)
                           for k, v in payload["ln_gq"].items()}
 
@@ -707,8 +889,14 @@ class GarblerEndpoint(_Endpoint):
 
     # ------------------------------------------------------------------
     def handshake(self) -> Plan:
+        """Hello exchange; raises :class:`BundlePoolEmpty` if a gateway
+        at its session cap sheds the connection (typed CONTROL frame
+        with a retry-after hint, not an error string)."""
         with self._lock:
-            self._send_control("hello", {"version": W.WIRE_VERSION})
+            self._send_control("hello", {
+                "version": W.WIRE_VERSION,
+                "client": self.shared.client_token,
+            })
             self.shared.adopt_hello(self._expect_msg(W.KIND_CONTROL,
                                                      "hello-ok"))
         return self.shared.plan
@@ -742,6 +930,10 @@ class GarblerEndpoint(_Endpoint):
         t, k = p.t, p.k
         ids = [next(_bundle_ids) for _ in range(n)]
         self._send_control("prep", {"n": n, "ids": ids})
+        # admission gate BEFORE any garbling: a bounded server pool sheds
+        # here (BundlePoolEmpty via the CONTROL shed frame) while the
+        # expensive offline work is still unstarted on both sides
+        self._expect_msg(W.KIND_CONTROL, "prep-ok")
 
         nets, per_req = _distinct_nets(p, plan)
         slabs: Dict[str, tuple] = {}
@@ -989,20 +1181,25 @@ class PitNetServer:
         self.threads.append(th)
         return th
 
-    def serve_tcp(self, listener, *, accept_timeout: float = 30.0,
-                  timeout: Optional[float] = None, name: str = ""
-                  ) -> threading.Thread:
-        """Accept one connection on ``listener`` (in the background, so
-        the caller can connect concurrently — the TCP backlog holds the
-        race) and serve it. One call per endpoint pair member."""
-        def work():
-            self.serve_transport(listener.accept(timeout=accept_timeout),
-                                 timeout=timeout, name=name)
+    def serve_tcp(self, listener, *, accept_timeout: float = 1.0,
+                  timeout: Optional[float] = None, name: str = "",
+                  max_conns: Optional[int] = None):
+        """Serve every connection accepted on ``listener`` in the
+        background (each becomes an evaluator endpoint over the shared
+        store) until the returned :class:`~repro.net.transport.AcceptLoop`
+        is stopped, the listener closes, or ``max_conns`` is reached.
 
-        th = threading.Thread(target=work, daemon=True,
-                              name=(name or "pit-eval") + "-accept")
-        th.start()
-        return th
+        One call now serves a whole pipelined endpoint pair — callers
+        sequence with ``loop.wait_accepted(n)`` instead of joining a
+        one-shot accept thread (the old single-accept-per-call shape).
+        ``accept_timeout`` is the stop-flag poll interval.
+        """
+        def handler(transport):
+            self.serve_transport(transport, timeout=timeout, name=name)
+
+        return listener.accept_loop(
+            handler, accept_timeout=accept_timeout, max_accepts=max_conns,
+            name=(name or "pit-eval") + "-accept")
 
     def join(self, timeout: Optional[float] = None) -> None:
         for th in self.threads:

@@ -28,8 +28,9 @@ from __future__ import annotations
 import queue
 import socket
 import struct
+import threading
 import time
-from typing import Optional, Tuple
+from typing import Callable, Optional, Tuple
 
 
 class TransportClosed(ConnectionError):
@@ -180,12 +181,21 @@ class TcpTransport(Transport):
         return b"".join(chunks)
 
     def recv(self, timeout: Optional[float] = None) -> bytes:
-        self._sock.settimeout(timeout)
+        # settimeout on a socket closed by another thread (server
+        # shutdown racing a blocked endpoint) raises EBADF — that is a
+        # close, not an error worth a thread's life
+        try:
+            self._sock.settimeout(timeout)
+        except OSError as e:
+            raise TransportClosed(f"recv failed: {e}") from e
         try:
             (n,) = _LEN.unpack(self._recv_exact(_LEN.size))
             frame = self._recv_exact(n)
         finally:
-            self._sock.settimeout(None)
+            try:
+                self._sock.settimeout(None)
+            except OSError:
+                pass
         self.bytes_recv += len(frame)
         self.frames_recv += 1
         return frame
@@ -198,13 +208,49 @@ class TcpTransport(Transport):
         self._sock.close()
 
 
+class AcceptLoop:
+    """Handle on a background accept loop (see ``TcpListener.accept_loop``).
+
+    ``accepted`` counts handed-off connections; ``wait_accepted(n)``
+    blocks until at least ``n`` arrived (how callers sequence "connect,
+    then talk" without racing the acceptor); ``stop()`` asks the loop to
+    exit at its next poll and ``join()`` waits for the thread. Closing
+    the listener also stops the loop (the blocked ``accept`` fails).
+    """
+
+    def __init__(self, thread: threading.Thread, stop_event: threading.Event):
+        self._thread = thread
+        self._stop = stop_event
+        self._cv = threading.Condition()
+        self.accepted = 0
+        self.error: Optional[BaseException] = None  # handler failure, if any
+
+    def _note_accept(self) -> None:
+        with self._cv:
+            self.accepted += 1
+            self._cv.notify_all()
+
+    def wait_accepted(self, n: int, timeout: Optional[float] = None) -> bool:
+        with self._cv:
+            return self._cv.wait_for(lambda: self.accepted >= n,
+                                     timeout=timeout)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        self._thread.join(timeout=timeout)
+
+    @property
+    def alive(self) -> bool:
+        return self._thread.is_alive()
+
+
 class TcpListener:
     """Serving-side acceptor: ``TcpListener() -> accept() -> TcpTransport``."""
 
     def __init__(self, host: str = "127.0.0.1", port: int = 0,
                  backlog: int = 4):
-        import threading
-
         self._sock = socket.socket(socket.AF_INET, socket.SOCK_STREAM)
         self._sock.setsockopt(socket.SOL_SOCKET, socket.SO_REUSEADDR, 1)
         self._sock.bind((host, port))
@@ -233,6 +279,48 @@ class TcpListener:
                 self._sock.settimeout(None)
         sock.settimeout(None)
         return TcpTransport(sock, **shaping)
+
+    def accept_loop(self, handler: Callable[[TcpTransport], None], *,
+                    accept_timeout: float = 1.0,
+                    max_accepts: Optional[int] = None,
+                    name: str = "accept-loop", **shaping) -> AcceptLoop:
+        """Accept connections in the background until stopped.
+
+        Every accepted transport is handed to ``handler`` from the loop
+        thread (handlers that serve should spawn and return, like
+        ``PitNetServer.serve_transport``). ``accept_timeout`` is the
+        poll interval at which the loop re-checks its stop flag, so
+        ``stop()`` takes effect within one interval; closing the
+        listener stops it immediately. ``max_accepts`` bounds the number
+        of connections (None = until stopped). A handler exception stops
+        the loop and is kept on ``AcceptLoop.error`` — an acceptor that
+        silently drops connections would look exactly like a network
+        problem to clients.
+        """
+        stop = threading.Event()
+
+        def work() -> None:
+            while not stop.is_set():
+                if max_accepts is not None and loop.accepted >= max_accepts:
+                    return
+                try:
+                    transport = self.accept(timeout=accept_timeout, **shaping)
+                except TransportClosed:
+                    continue  # poll timeout: re-check the stop flag
+                except OSError:
+                    return  # listener closed under us: clean shutdown
+                try:
+                    handler(transport)
+                except Exception as e:
+                    loop.error = e
+                    transport.close()
+                    return
+                loop._note_accept()
+
+        th = threading.Thread(target=work, daemon=True, name=name)
+        loop = AcceptLoop(th, stop)
+        th.start()
+        return loop
 
     def close(self) -> None:
         self._sock.close()

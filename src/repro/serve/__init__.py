@@ -1,6 +1,6 @@
 from repro.serve.engine import ServeEngine
+from repro.serve.errors import BundlePoolEmpty
 from repro.serve.private_engine import (
-    BundlePoolEmpty,
     NetPrivateServeEngine,
     PrivateRequest,
     PrivateServeEngine,
@@ -12,4 +12,18 @@ __all__ = [
     "NetPrivateServeEngine",
     "PrivateRequest",
     "BundlePoolEmpty",
+    "PitGateway",
+    "gateway_client",
 ]
+
+_GATEWAY_EXPORTS = ("PitGateway", "gateway_client")
+
+
+def __getattr__(name):
+    # the gateway sits on top of repro.net.party, which itself imports
+    # repro.serve.errors — importing it eagerly here would close that
+    # loop into a cycle, so it loads on first attribute access instead
+    if name in _GATEWAY_EXPORTS:
+        from repro.serve import gateway
+        return getattr(gateway, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,321 @@
+"""Multi-client front door for the two-party serving runtime.
+
+:class:`PitGateway` hosts one model behind a single
+:class:`~repro.net.transport.TcpListener` accept loop and muxes N
+concurrent client *sessions* over it. The session — not the transport —
+is the unit of isolation: every admitted client token gets its own
+:class:`~repro.net.party.SessionState` (a private bundle-id namespace, a
+per-session :class:`~repro.net.party.WireLedger`, rate/byte accounting),
+and both transports of a pipelined endpoint pair bind to the same
+session because their hellos carry the same client token.
+
+What is shared, deliberately, is the expensive part: all sessions run
+over ONE :class:`~repro.net.party.ServerShared` — one compiled plan, one
+protocol instance whose netlist cache is the shared garbling cache
+(observable via :class:`~repro.core.session.GarblingCache`: exactly one
+slab per distinct ``(netlist, instances, impl)``, however many clients
+are connected), one quantized-weight store, and one preprocessing refill
+pool discipline.
+
+Admission control (the serving-plane contract):
+
+* **session cap** — at ``max_sessions`` live sessions, a new client's
+  hello is answered with a typed CONTROL ``shed`` frame carrying a
+  ``retry_after_s`` hint and the connection is closed. The client sees
+  :class:`~repro.serve.errors.BundlePoolEmpty` (``scope="session"``),
+  never an exception string off the wire.
+* **bounded bundle pools** — each session may hold at most ``pool_cap``
+  outstanding bundles. A ``prep`` that would exceed it is shed the same
+  way (``scope="prep"``) *before* the client garbles anything; the hint
+  is computed from the gateway-wide refill queue depth times the
+  observed per-bundle preprocessing time.
+* **graceful teardown** — when a session's last transport drops (clean
+  bye or a mid-exchange kill), its in-flight bundles are counted as
+  returned and reclaimed, and the session slot frees for the next
+  client. Other sessions never notice.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.net.party import (
+    EvaluatorEndpoint,
+    ServerShared,
+    SessionState,
+)
+from repro.net.transport import AcceptLoop, TcpListener, Transport, \
+    TransportClosed
+
+
+class _SessionShed(TransportClosed):
+    """Internal: hello refused at the session cap. Subclasses
+    TransportClosed so the serve loop unwinds as a clean disconnect —
+    the shed frame is already on the wire."""
+
+
+class _GatewayEndpoint(EvaluatorEndpoint):
+    """One accepted transport. Starts on a provisional session (so
+    pre-hello frame bytes are metered somewhere), then binds to the
+    session the hello's client token resolves to."""
+
+    def __init__(self, transport: Transport, gateway: "PitGateway", *,
+                 timeout: Optional[float] = None):
+        super().__init__(transport, shared=gateway.shared, timeout=timeout,
+                         session=SessionState(sid=-1, client="pre-hello"))
+        self.gateway = gateway
+        self._bound = False
+
+    # -- session resolution -------------------------------------------
+    def _on_hello(self, payload) -> dict:
+        token = payload.get("client")
+        sess, hint = self.gateway._admit_session(token)
+        if sess is None:
+            self._send_control("shed", {"retry_after_s": hint,
+                                        "scope": "session"})
+            raise _SessionShed("session cap reached, connection shed")
+        # fold the provisional (pre-hello) metering into the real ledger,
+        # then rebind this endpoint onto the session's state
+        sess.ledger.absorb(self.ledger)
+        self.session = sess
+        self.ledger = sess.ledger
+        self._bound = True
+        return {"session": sess.sid}
+
+    def _admit_prep(self, n: int) -> Optional[float]:
+        return self.gateway._admit_prep(self.session, n)
+
+    def _handle_prep(self, payload) -> None:
+        sess = self.session
+        before = sess.bundles_prepped
+        n = int(payload["n"])
+        self.gateway._prep_begin(n)
+        t0 = time.perf_counter()
+        try:
+            super()._handle_prep(payload)
+        finally:
+            prepped = sess.bundles_prepped > before
+            self.gateway._prep_end(n, time.perf_counter() - t0,
+                                   counted=prepped)
+
+    def _on_disconnect(self) -> None:
+        if self._bound:
+            self.gateway._release_endpoint(self.session)
+
+
+class PitGateway:
+    """Serve one model to many clients from one accept loop.
+
+    ``max_sessions`` bounds concurrently-live client sessions;
+    ``pool_cap`` bounds outstanding preprocessed bundles per session
+    (admission happens before the client garbles, so a shed wastes no
+    offline work on either side). ``retry_floor_s`` is the minimum
+    retry-after hint when no preprocessing time has been observed yet.
+    """
+
+    def __init__(self, model, seq_len: int, *, impl: str = "ref",
+                 seed: int = 104729, max_sessions: int = 8,
+                 pool_cap: int = 4, retry_floor_s: float = 0.05,
+                 shared: Optional[ServerShared] = None):
+        self.shared = shared or ServerShared(model, seq_len, impl=impl,
+                                             seed=seed)
+        self.max_sessions = max_sessions
+        self.pool_cap = pool_cap
+        self.retry_floor_s = retry_floor_s
+        self._lock = threading.Lock()
+        self._sessions: Dict[str, SessionState] = {}  # token -> live
+        self._closed: List[Dict[str, object]] = []  # summaries, torn down
+        self._next_sid = 1
+        self.sessions_admitted = 0
+        self.sessions_shed = 0
+        self.bundles_returned = 0
+        # refill-queue instrumentation for retry-after hints
+        self._prep_inflight = 0  # bundles in flight across all sessions
+        self._prep_ewma_s: Optional[float] = None  # seconds per bundle
+        self.endpoints: List[_GatewayEndpoint] = []
+        self.threads: List[threading.Thread] = []
+        self._loops: List[AcceptLoop] = []
+        self._started_s = time.perf_counter()
+
+    # ------------------------------------------------------------------
+    # admission control
+    # ------------------------------------------------------------------
+    def _admit_session(self, token: Optional[str]
+                       ) -> Tuple[Optional[SessionState], Optional[float]]:
+        """Resolve a hello's client token to a session, minting one if
+        needed. Returns ``(session, None)`` on admit, ``(None, hint)``
+        when the session cap sheds the connection."""
+        with self._lock:
+            if token and token in self._sessions:
+                sess = self._sessions[token]  # second endpoint of a pair
+                sess.endpoints += 1
+                return sess, None
+            if len(self._sessions) >= self.max_sessions:
+                self.sessions_shed += 1
+                return None, self._retry_hint_locked(self.pool_cap)
+            sid = self._next_sid
+            self._next_sid += 1
+            # a token-less hello (bare GarblerEndpoint predating the
+            # gateway) still gets a session — keyed so it cannot collide
+            token = token or f"anon-{sid}"
+            sess = SessionState(sid=sid, client=token)
+            sess.endpoints = 1
+            self._sessions[token] = sess
+            self.sessions_admitted += 1
+            return sess, None
+
+    def _admit_prep(self, sess: SessionState, n: int) -> Optional[float]:
+        """Bounded per-session pool: admit ``n`` more bundles or return a
+        retry-after hint."""
+        with self._lock:
+            if sess.outstanding() + n <= self.pool_cap:
+                return None
+            # _prep_begin already counted this request into the refill
+            # queue depth, so the hint covers it without adding n again
+            return self._retry_hint_locked(0)
+
+    def _retry_hint_locked(self, n: int) -> float:
+        """Retry-after = (refill queue depth + the refused request) times
+        the observed per-bundle preprocessing time — an actual backlog
+        estimate, not a constant."""
+        per = self._prep_ewma_s or self.retry_floor_s
+        return round(max(self.retry_floor_s,
+                         (self._prep_inflight + n) * per), 3)
+
+    # -- refill-queue instrumentation ----------------------------------
+    def _prep_begin(self, n: int) -> None:
+        with self._lock:
+            self._prep_inflight += n
+
+    def _prep_end(self, n: int, elapsed_s: float, *, counted: bool) -> None:
+        with self._lock:
+            self._prep_inflight -= n
+            if counted and n > 0:
+                per = elapsed_s / n
+                self._prep_ewma_s = (per if self._prep_ewma_s is None
+                                     else 0.7 * self._prep_ewma_s
+                                     + 0.3 * per)
+
+    # ------------------------------------------------------------------
+    # serving
+    # ------------------------------------------------------------------
+    def serve_transport(self, transport: Transport, *,
+                        timeout: Optional[float] = None
+                        ) -> threading.Thread:
+        """Serve one accepted transport on its own thread (session
+        resolution happens at its hello)."""
+        ep = _GatewayEndpoint(transport, self, timeout=timeout)
+        self.endpoints.append(ep)
+        th = threading.Thread(target=self._serve_one, args=(ep,),
+                              daemon=True,
+                              name=f"pit-gw-ep-{len(self.threads)}")
+        th.start()
+        self.threads.append(th)
+        return th
+
+    @staticmethod
+    def _serve_one(ep: _GatewayEndpoint) -> None:
+        try:
+            ep.serve_forever()
+        finally:
+            # unlike the single-client server, the gateway owns the
+            # accepted socket's lifetime: done (bye, kill or shed) means
+            # closed, so shed clients fail fast instead of waiting out
+            # their recv timeout
+            try:
+                ep.transport.close()
+            except OSError:
+                pass
+
+    def serve_listener(self, listener: TcpListener, *,
+                       accept_timeout: float = 1.0,
+                       timeout: Optional[float] = None, **shaping
+                       ) -> AcceptLoop:
+        """The front door: ONE accept loop on ``listener``; every
+        accepted connection becomes a gateway endpoint."""
+        loop = listener.accept_loop(
+            lambda t: self.serve_transport(t, timeout=timeout),
+            accept_timeout=accept_timeout, name="pit-gateway-accept",
+            **shaping)
+        self._loops.append(loop)
+        return loop
+
+    # ------------------------------------------------------------------
+    # teardown & introspection
+    # ------------------------------------------------------------------
+    def _release_endpoint(self, sess: SessionState) -> None:
+        """An endpoint bound to ``sess`` disconnected. When the last one
+        drops, reclaim the session: in-flight bundles are returned (the
+        client is gone; its ids can never be run) and the slot frees."""
+        with self._lock:
+            sess.endpoints -= 1
+            if sess.endpoints > 0:
+                return
+            with sess.lock:
+                returned = len(sess.bundles)
+                sess.bundles.clear()
+                sess.bundles_returned += returned
+            self.bundles_returned += returned
+            self._sessions.pop(sess.client, None)
+            self._closed.append(sess.summary())
+
+    def stats(self) -> Dict[str, object]:
+        """Gateway-wide accounting: admission counters, the shared
+        garbling cache, and per-session summaries (live + torn down)."""
+        with self._lock:
+            live = [s.summary() for s in self._sessions.values()]
+            closed = list(self._closed)
+            inflight = self._prep_inflight
+            ewma = self._prep_ewma_s
+        sessions = closed + live
+        dt = max(time.perf_counter() - self._started_s, 1e-9)
+        consumed = sum(s["bundles_consumed"] for s in sessions)
+        return {
+            "sessions_active": len(live),
+            "sessions_admitted": self.sessions_admitted,
+            "sessions_shed": self.sessions_shed,
+            "prep_sheds": sum(s["sheds"] for s in sessions),
+            "bundles_prepped": sum(s["bundles_prepped"] for s in sessions),
+            "bundles_consumed": consumed,
+            "bundles_returned": self.bundles_returned,
+            "bundles_outstanding": sum(s["bundles_outstanding"]
+                                       for s in sessions),
+            "prep_inflight": inflight,
+            "prep_ewma_s": None if ewma is None else round(ewma, 4),
+            "elapsed_s": round(dt, 3),
+            "bundles_per_s": round(consumed / dt, 3),
+            "garbling_cache": self.shared.gc_cache.summary(),
+            "sessions": sessions,
+        }
+
+    def join(self, timeout: Optional[float] = None) -> None:
+        for th in self.threads:
+            th.join(timeout=timeout)
+
+    def close(self) -> None:
+        for loop in self._loops:
+            loop.stop()
+        for ep in self.endpoints:
+            try:
+                ep.transport.close()
+            except OSError:
+                pass
+
+
+def gateway_client(host: str, port: int, *, pool_target: int = 2,
+                   seed: int = 0, impl: str = "ref",
+                   timeout: Optional[float] = None, **shaping):
+    """Connect a pipelined client (offline + online transport pair) to a
+    gateway and return a ready :class:`NetPrivateServeEngine`. Both
+    transports carry the same client token, so the gateway binds them to
+    one session. Raises :class:`~repro.serve.errors.BundlePoolEmpty`
+    (``scope="session"``) if the gateway sheds the connection."""
+    from repro.net.transport import TcpTransport
+    from repro.serve.private_engine import NetPrivateServeEngine
+
+    offline = TcpTransport.connect(host, port, **shaping)
+    online = TcpTransport.connect(host, port, **shaping)
+    return NetPrivateServeEngine(offline, online, pool_target=pool_target,
+                                 seed=seed, impl=impl, timeout=timeout)

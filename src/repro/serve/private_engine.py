@@ -23,6 +23,7 @@ object, and correctness beats concurrency there.
 from __future__ import annotations
 
 import threading
+import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Sequence
@@ -30,10 +31,7 @@ from typing import Deque, Dict, List, Optional, Sequence
 import numpy as np
 
 from repro.core.session import PiTSession, PreprocessedBundle, compile
-
-
-class BundlePoolEmpty(RuntimeError):
-    """No preprocessed bundle available for the request's bucket."""
+from repro.serve.errors import BundlePoolEmpty
 
 
 @dataclass
@@ -65,7 +63,12 @@ class PrivateServeEngine:
         self._sessions: Dict[int, PiTSession] = {}
         self._pools: Dict[int, Deque[PreprocessedBundle]] = {}
         self._locks: Dict[int, threading.Lock] = {}
-        self._meta = threading.Lock()  # guards bucket creation only
+        self._meta = threading.Lock()  # guards bucket creation + hints
+        # refill-queue depth (bundles scheduled, not yet pooled) and the
+        # observed per-bundle preprocessing time, per bucket — the raw
+        # material for the retry-after hint a shed carries
+        self._refill_pending: Dict[int, int] = {}
+        self._prep_ewma_s: Dict[int, float] = {}
         for S in buckets:
             self.session(S)
 
@@ -90,13 +93,47 @@ class PrivateServeEngine:
         with self._meta:
             return len(self._pools.get(seq_len, ()))
 
+    def _note_refill(self, seq_len: int, count: int) -> None:
+        with self._meta:
+            self._refill_pending[seq_len] = (
+                self._refill_pending.get(seq_len, 0) + count)
+
+    def _note_prepped(self, seq_len: int, count: int, elapsed_s: float
+                      ) -> None:
+        with self._meta:
+            self._refill_pending[seq_len] = (
+                self._refill_pending.get(seq_len, 0) - count)
+            if count > 0 and elapsed_s > 0:
+                per = elapsed_s / count
+                prev = self._prep_ewma_s.get(seq_len)
+                self._prep_ewma_s[seq_len] = (
+                    per if prev is None else 0.7 * prev + 0.3 * per)
+
+    def retry_after_hint(self, seq_len: int) -> Optional[float]:
+        """When is a dry bucket expected to have a bundle again? Refill
+        queue depth times observed per-bundle preprocessing time — None
+        until either has been observed (no data, no guess)."""
+        with self._meta:
+            depth = self._refill_pending.get(seq_len, 0)
+            per = self._prep_ewma_s.get(seq_len)
+        if per is None:
+            return None
+        return round(max(depth, 1) * per, 3)
+
     def preprocess(self, seq_len: int, count: int) -> int:
         """Synchronously add ``count`` bundles to the bucket's pool."""
         sess = self.session(seq_len)
-        with self._bucket_lock(seq_len):
-            bundles = sess.preprocess(count)
-            self._pools[seq_len].extend(bundles)
-            return len(self._pools[seq_len])
+        self._note_refill(seq_len, count)
+        elapsed = 0.0
+        try:
+            with self._bucket_lock(seq_len):
+                t0 = time.perf_counter()
+                bundles = sess.preprocess(count)
+                elapsed = time.perf_counter() - t0
+                self._pools[seq_len].extend(bundles)
+                return len(self._pools[seq_len])
+        finally:
+            self._note_prepped(seq_len, count, elapsed)
 
     def maintain(self, seq_len: int) -> int:
         """Top the bucket's pool back up to ``pool_target``.
@@ -108,7 +145,13 @@ class PrivateServeEngine:
         with self._bucket_lock(seq_len):
             deficit = self.pool_target - len(self._pools[seq_len])
             if deficit > 0:
-                self._pools[seq_len].extend(sess.preprocess(deficit))
+                self._note_refill(seq_len, deficit)
+                t0 = time.perf_counter()
+                try:
+                    self._pools[seq_len].extend(sess.preprocess(deficit))
+                finally:
+                    self._note_prepped(seq_len, deficit,
+                                       time.perf_counter() - t0)
             return len(self._pools[seq_len])
 
     def refill_async(self, seq_len: int, count: Optional[int] = None
@@ -135,7 +178,8 @@ class PrivateServeEngine:
         raise BundlePoolEmpty(
             f"no preprocessed bundle for bucket S={seq_len} "
             f"(pool empty; call preprocess/refill_async or enable "
-            f"auto_refill)")
+            f"auto_refill)",
+            retry_after_s=self.retry_after_hint(seq_len))
 
     # ------------------------------------------------------------------
     # serving
@@ -212,6 +256,9 @@ class NetPrivateServeEngine:
         self.offline.handshake()
         self.online.handshake()
         self._refill_lock = threading.Lock()  # deficit computation
+        self._hint_lock = threading.Lock()
+        self._refill_pending = 0  # bundles scheduled, not yet pooled
+        self._prep_ewma_s: Optional[float] = None
 
     @property
     def plan(self):
@@ -225,9 +272,40 @@ class NetPrivateServeEngine:
         return self._shared.pool_size()
 
     # -- offline pair --------------------------------------------------
-    def preprocess(self, count: int) -> int:
-        with self._refill_lock:
+    def _note_refill(self, count: int) -> None:
+        with self._hint_lock:
+            self._refill_pending += count
+
+    def _note_prepped(self, count: int, elapsed_s: float) -> None:
+        with self._hint_lock:
+            self._refill_pending -= count
+            if count > 0 and elapsed_s > 0:
+                per = elapsed_s / count
+                self._prep_ewma_s = (per if self._prep_ewma_s is None
+                                     else 0.7 * self._prep_ewma_s
+                                     + 0.3 * per)
+
+    def retry_after_hint(self) -> Optional[float]:
+        """Refill queue depth × observed per-bundle preprocessing time
+        (wire round trips included); None before the first refill."""
+        with self._hint_lock:
+            if self._prep_ewma_s is None:
+                return None
+            return round(max(self._refill_pending, 1) * self._prep_ewma_s, 3)
+
+    def _preprocess_timed(self, count: int) -> None:
+        elapsed = 0.0
+        try:
+            t0 = time.perf_counter()
             self.offline.preprocess(count)
+            elapsed = time.perf_counter() - t0
+        finally:
+            self._note_prepped(count, elapsed)
+
+    def preprocess(self, count: int) -> int:
+        self._note_refill(count)
+        with self._refill_lock:
+            self._preprocess_timed(count)
         return self.pool_size()
 
     def maintain(self) -> int:
@@ -240,7 +318,8 @@ class NetPrivateServeEngine:
         with self._refill_lock:
             deficit = self.pool_target - self.pool_size()
             if deficit > 0:
-                self.offline.preprocess(deficit)
+                self._note_refill(deficit)
+                self._preprocess_timed(deficit)
             return self.pool_size()
 
     def refill_async(self, count: Optional[int] = None) -> threading.Thread:
@@ -263,7 +342,8 @@ class NetPrivateServeEngine:
             if bid is None:
                 raise BundlePoolEmpty(
                     "no preprocessed bundle in the net pool (call "
-                    "preprocess/refill_async)")
+                    "preprocess/refill_async)",
+                    retry_after_s=self.retry_after_hint())
             try:
                 r.result = self.online.run(r.x, bundle_id=bid)
             except Exception:

@@ -230,10 +230,10 @@ def test_net_tcp_end_to_end():
     x = rng.normal(0, 1, (S, D))
     srv = PitNetServer(model, S, impl="ref")
     lst = TcpListener()
-    th = srv.serve_tcp(lst, accept_timeout=30, timeout=300)
+    loop = srv.serve_tcp(lst, timeout=300)
     cli = GarblerEndpoint(TcpTransport.connect("127.0.0.1", lst.port),
                           seed=9, impl="ref", timeout=300)
-    th.join(timeout=30)
+    assert loop.wait_accepted(1, timeout=30)
     cli.preprocess(1)
     y = cli.run(x)
     sess = model.compile_session(S, impl="ref")

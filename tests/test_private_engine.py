@@ -100,6 +100,26 @@ def test_auto_refill_serves_from_empty_pool(engine_model):
     assert engine.pool_size(S) == 0
 
 
+def test_shed_carries_retry_after_hint(engine_model):
+    """A dry-pool shed carries a retry-after hint computed from observed
+    preprocessing time × refill queue depth — None only before any
+    preprocessing has ever been timed."""
+    engine = PrivateServeEngine(engine_model, buckets=(S,), pool_target=1,
+                                impl="ref")
+    rng = np.random.default_rng(5)
+    with pytest.raises(BundlePoolEmpty) as ei:
+        engine.serve([_request(rng)])  # nothing observed yet: no guess
+    assert ei.value.retry_after_s is None
+
+    engine.preprocess(S, 1)  # the EWMA now has a real data point
+    engine.serve([_request(rng)])  # drains the pool
+    with pytest.raises(BundlePoolEmpty) as ei:
+        engine.serve([_request(rng)])
+    assert ei.value.retry_after_s is not None
+    assert ei.value.retry_after_s > 0
+    assert ei.value.scope == "pool"
+
+
 def test_failed_serve_returns_fresh_bundle_to_pool(engine_model):
     """A bad request must not burn the (expensive) bundle it claimed."""
     engine = PrivateServeEngine(engine_model, buckets=(S,), pool_target=1,
