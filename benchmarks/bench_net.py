@@ -18,11 +18,23 @@ Measurements per transport (``InProcPipe``, loopback TCP):
   flight.
 * **gateway** — N concurrent client sessions behind one ``PitGateway``
   accept loop: sessions served, shared-garbling-cache hits (one slab
-  per distinct netlist for all clients), aggregate bundles/sec.
+  per distinct netlist for all clients), aggregate bundles/sec. On the
+  full config this phase runs the reduced smoke model (noted in the
+  JSON) so the 3-client fan-out doesn't dominate the bench wall-clock.
+* **wire v1 vs v2** — endpoints negotiate wire v2 (PRG-seeded label
+  streams, delta-encoded table batches, IKNP OT, round coalescing); the
+  report carries both versions' oracle byte/round counts, the offline
+  byte reduction, the coalesced round count
+  (``rounds_after_coalescing`` < raw metered messages), per-phase
+  direction-flip counts, and the LAN-model offline speedup computed
+  with the *measured* post-coalescing rounds.
 
 ``python benchmarks/bench_net.py`` writes ``BENCH_net.json`` at the repo
 root; ``--smoke`` (CI / ``benchmarks/run.py``) runs the tiny config and
-asserts parity + ledger equality only.
+asserts parity + ledger equality only; ``--check`` re-derives the
+smoke-config oracle and fails on a >20% wire-byte regression against
+the committed JSON (the net ratchet ``benchmarks/run.py --check``
+runs in CI).
 """
 
 from __future__ import annotations
@@ -38,6 +50,10 @@ SMOKE = {"d": 8, "heads": 2, "d_ff": 16, "S": 4, "layers": 1,
          "poly_n": 256, "primes": 3, "t_bits": 40, "frac": 6}
 FULL = {"d": 16, "heads": 2, "d_ff": 32, "S": 8, "layers": 1,
         "poly_n": 256, "primes": 3, "t_bits": 40, "frac": 6}
+# gateway fan-out point: mux/cache behavior is model-size independent,
+# so the 3 concurrent clients run the smallest valid config
+GATEWAY_CFG = {"d": 8, "heads": 2, "d_ff": 16, "S": 2, "layers": 1,
+               "poly_n": 256, "primes": 3, "t_bits": 40, "frac": 6}
 
 
 def _model(cfg):
@@ -55,13 +71,15 @@ def _model(cfg):
                               weights, seed=0)
 
 
-def _oracle(model, cfg, x):
+def _oracle(model, cfg, x, wire_version=1):
     """In-process metered session: the byte/round/latency oracle."""
-    sess = model.compile_session(cfg["S"], impl="ref")
+    sess = model.compile_session(cfg["S"], impl="ref",
+                                 wire_version=wire_version)
     bundles = sess.preprocess(1)
     y = sess.run(x, bundles[0])
     st = sess.stats
     return y, {
+        "wire_version": wire_version,
         "offline_bytes": st.channel_offline.total,
         "online_bytes": st.channel_online.total,
         "offline_msgs": st.channel_offline.rounds,
@@ -116,19 +134,37 @@ def _point(model, cfg, kind, x, y_ref, oracle):
         proto = led.offline.total + led.online.total
         overhead = led.frame_bytes - proto - led.sim_bytes \
             - led.control_bytes
+        s = led.summary()
         return {
             "transport": kind,
+            "wire_version": cli.shared.negotiated_version,
+            "compression": cli.shared.negotiated_compression,
             "offline_s": round(t_off, 3),
             "online_s": round(t_on, 3),
             "offline_bytes": led.offline.total,
             "online_bytes": led.online.total,
             "sim_sideband_bytes": led.sim_bytes,
+            "table_resid_bytes": led.resid_bytes,
             "control_bytes": led.control_bytes,
             "framing_overhead_bytes": overhead,
             "overhead_pct_of_proto": round(
                 100.0 * (led.sim_bytes + led.control_bytes + overhead)
                 / max(proto, 1), 3),
             "wire_dir_flips": led.dir_flips,
+            "dir_flips_offline": s["dir_flips_offline"],
+            "dir_flips_online": s["dir_flips_online"],
+            "rounds_after_coalescing": s["rounds_after_coalescing"],
+            "raw_messages": s["raw_messages"],
+            "seed_stream_segs": led.seed_stream_segs,
+            "seed_stream_labels": led.seed_stream_labels,
+            "delta_batches": led.delta_batches,
+            # LAN model re-priced with the *measured* post-coalescing
+            # round structure (the oracle's own time_s charges one
+            # latency per metered message, i.e. pre-coalescing)
+            "lan_model_offline_s_coalesced": round(led.offline.time_s(
+                max_rounds=max(led.proto_frames_offline, 1)), 6),
+            "lan_model_online_s_coalesced": round(led.online.time_s(
+                max_rounds=max(led.proto_frames_online, 1)), 6),
             "ledger_matches_oracle": True,
         }
     finally:
@@ -235,47 +271,141 @@ def _gateway(model, cfg, x, y_ref, n_clients=3):
     }
 
 
+def _ot_bytes(oracle):
+    """Total OT traffic (extension batches + one-time base exchange)."""
+    return sum(v for phase in ("offline_by_tag", "online_by_tag")
+               for t, v in oracle[phase].items()
+               if t.startswith("ot:") or t == "ot-base")
+
+
 def run(cfg, write=print):
     model = _model(cfg)
     rng = np.random.default_rng(1)
     x = rng.normal(0, 1, (cfg["S"], cfg["d"]))
-    y_ref, oracle = _oracle(model, cfg, x)
+    y_v1, oracle_v1 = _oracle(model, cfg, x, wire_version=1)
+    y_ref, oracle = _oracle(model, cfg, x, wire_version=2)
+    assert np.array_equal(y_v1, y_ref), \
+        "wire-version knob changed the in-process output"
 
     points = []
     for kind in ("inproc", "tcp"):
         pt = _point(model, cfg, kind, x, y_ref, oracle)
         points.append(pt)
         write(f"net[{kind}],{pt['online_s'] * 1e6:.0f},"
+              f"v{pt['wire_version']} "
               f"offline {pt['offline_bytes'] / 1e6:.2f}MB/"
               f"{pt['offline_s']}s online {pt['online_bytes'] / 1e6:.2f}MB/"
-              f"{pt['online_s']}s overhead {pt['overhead_pct_of_proto']}% "
-              f"ledger==oracle")
+              f"{pt['online_s']}s rounds {pt['rounds_after_coalescing']}"
+              f"(raw {pt['raw_messages']}) "
+              f"overhead {pt['overhead_pct_of_proto']}% ledger==oracle")
+
+    # v1 → v2 wire comparison (byte totals from the two oracles, round
+    # structure from the measured inproc point)
+    inp = points[0]
+    v1_ot, v2_ot = _ot_bytes(oracle_v1), _ot_bytes(oracle)
+    comparison = {
+        "v1_offline_bytes": oracle_v1["offline_bytes"],
+        "v2_offline_bytes": oracle["offline_bytes"],
+        "offline_bytes_reduction_x": round(
+            oracle_v1["offline_bytes"] / max(oracle["offline_bytes"], 1), 3),
+        "v1_lan_model_offline_s": round(
+            oracle_v1["lan_model_offline_s"], 6),
+        "v2_lan_model_offline_s_coalesced":
+            inp["lan_model_offline_s_coalesced"],
+        "lan_model_offline_speedup_x": round(
+            oracle_v1["lan_model_offline_s"]
+            / max(inp["lan_model_offline_s_coalesced"], 1e-12), 3),
+        "v1_ot_bytes": v1_ot,
+        "v2_ot_bytes": v2_ot,
+        "ot_bytes_ratio_v2_over_v1": round(v2_ot / max(v1_ot, 1), 3),
+    }
+    write(f"net[v2-vs-v1],0,offline "
+          f"{comparison['offline_bytes_reduction_x']}x fewer bytes, "
+          f"LAN-model offline {comparison['lan_model_offline_speedup_x']}x "
+          f"faster, IKNP-OT/sim-OT bytes "
+          f"{comparison['ot_bytes_ratio_v2_over_v1']}x")
+
     pipe = _pipelined(model, cfg, x, y_ref)
     write(f"net[pipelined],{pipe['serve_s'] * 1e6:.0f},"
           f"online-during-refill="
           f"{pipe['online_completed_while_refill_in_flight']}")
-    gw = _gateway(model, cfg, x, y_ref)
+
+    # gateway fan-out: always the reduced config — 3 concurrent
+    # full-size clients would dominate the bench wall-clock without
+    # measuring anything new
+    gmodel = _model(GATEWAY_CFG)
+    grng = np.random.default_rng(1)
+    gx = grng.normal(0, 1, (GATEWAY_CFG["S"], GATEWAY_CFG["d"]))
+    gy, _ = _oracle(gmodel, GATEWAY_CFG, gx, wire_version=2)
+    gw = _gateway(gmodel, GATEWAY_CFG, gx, gy)
+    gw["model"] = (f"reduced (d={GATEWAY_CFG['d']}, S={GATEWAY_CFG['S']}) "
+                   f"for bench wall-clock")
     write(f"net[gateway],{gw['elapsed_s'] * 1e6:.0f},"
           f"{gw['sessions_served']} sessions "
           f"{gw['aggregate_bundles_per_s']} bundles/s "
           f"cache {gw['shared_cache_slabs']} slabs/"
           f"{gw['shared_cache_hits']} hits")
-    return {"config": cfg, "oracle": oracle, "points": points,
+    return {"config": cfg, "oracle": oracle, "oracle_v1": oracle_v1,
+            "wire_comparison": comparison, "points": points,
             "pipelined": pipe, "gateway": gw}
+
+
+def _smoke_oracle():
+    """Byte/round counts of the smoke config at both wire versions —
+    the deterministic reference ``check()`` ratchets against."""
+    model = _model(SMOKE)
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (SMOKE["S"], SMOKE["d"]))
+    _, o1 = _oracle(model, SMOKE, x, wire_version=1)
+    _, o2 = _oracle(model, SMOKE, x, wire_version=2)
+    keep = ("offline_bytes", "online_bytes", "offline_msgs", "online_msgs")
+    return {"v1": {k: o1[k] for k in keep}, "v2": {k: o2[k] for k in keep}}
 
 
 def full():
     result = {"bench": "net", **run(FULL, write=lambda m: print(m, flush=True))}
+    result["smoke_oracle"] = _smoke_oracle()
     out = Path(__file__).resolve().parents[1] / "BENCH_net.json"
     out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"# wrote {out}", flush=True)
-    o, pts = result["oracle"], result["points"]
-    print(f"# oracle msgs: {o['offline_msgs']} offline / "
-          f"{o['online_msgs']} online; LAN-model prediction "
-          f"{o['lan_model_offline_s']:.3f}s / {o['lan_model_online_s']:.3f}s; "
-          f"measured online: "
+    o, cmp_, pts = result["oracle"], result["wire_comparison"], \
+        result["points"]
+    print(f"# v2 oracle msgs: {o['offline_msgs']} offline / "
+          f"{o['online_msgs']} online; offline bytes "
+          f"{cmp_['v1_offline_bytes'] / 1e6:.1f}MB → "
+          f"{cmp_['v2_offline_bytes'] / 1e6:.1f}MB "
+          f"({cmp_['offline_bytes_reduction_x']}x); LAN-model offline "
+          f"{cmp_['v1_lan_model_offline_s']:.3f}s → "
+          f"{cmp_['v2_lan_model_offline_s_coalesced']:.3f}s "
+          f"({cmp_['lan_model_offline_speedup_x']}x); measured online: "
           + ", ".join(f"{p['transport']}={p['online_s']}s" for p in pts))
     return result
+
+
+def check() -> None:
+    """Net wire ratchet (CI, via ``benchmarks/run.py --check``):
+    re-derive the smoke-config oracle byte/round counts and fail on a
+    >20% byte regression — or any message-count growth — against the
+    committed ``BENCH_net.json``."""
+    path = Path(__file__).resolve().parents[1] / "BENCH_net.json"
+    ref = json.loads(path.read_text()).get("smoke_oracle")
+    assert ref, f"{path} has no smoke_oracle section — rerun the full bench"
+    got = _smoke_oracle()
+    for ver in ("v1", "v2"):
+        for key in ("offline_bytes", "online_bytes"):
+            g, w = got[ver][key], ref[ver][key]
+            assert g <= w * 1.2, \
+                f"net ratchet: {ver} {key} regressed {w} → {g} (>20%)"
+        for key in ("offline_msgs", "online_msgs"):
+            g, w = got[ver][key], ref[ver][key]
+            assert g <= w, \
+                f"net ratchet: {ver} {key} grew {w} → {g}"
+    assert got["v2"]["offline_bytes"] < got["v1"]["offline_bytes"], \
+        "net ratchet: v2 no longer compresses the offline phase"
+    print(f"net check OK: smoke oracle v1 "
+          f"{got['v1']['offline_bytes']}B / v2 "
+          f"{got['v2']['offline_bytes']}B offline within ratchet",
+          flush=True)
 
 
 def main() -> None:
@@ -283,12 +413,17 @@ def main() -> None:
     transports + the pipelined overlap check, parity/ledger asserted."""
     res = run(SMOKE)
     assert all(p["ledger_matches_oracle"] for p in res["points"])
+    assert all(p["wire_version"] == 2 for p in res["points"])
+    assert all(p["rounds_after_coalescing"] < p["raw_messages"]
+               for p in res["points"])
     assert res["pipelined"]["online_completed_while_refill_in_flight"]
     assert res["gateway"]["sessions_served"] == res["gateway"]["clients"]
 
 
 if __name__ == "__main__":
-    if "--smoke" in sys.argv:
+    if "--check" in sys.argv:
+        check()
+    elif "--smoke" in sys.argv:
         main()
     else:
         full()

@@ -14,9 +14,12 @@
                                  parity, pipelined refill; full run writes
                                  BENCH_net.json)
 
-``--check`` runs ONLY the gc_eval regression gate: re-measure a subset of
-the committed ``BENCH_gc_eval.json`` trajectory and fail on a >20%
-speedup regression (CI runs it right after the bench smoke).
+``--check`` runs ONLY the regression gates: the gc_eval gate re-measures
+a subset of the committed ``BENCH_gc_eval.json`` trajectory and fails on
+a >20% speedup regression; the net gate re-derives the smoke-config wire
+oracle and fails on a >20% byte — or any round-count — regression
+against the committed ``BENCH_net.json`` (CI runs both right after the
+bench smoke).
 """
 
 from __future__ import annotations
@@ -35,9 +38,10 @@ def check() -> None:
     import jax
 
     jax.config.update("jax_enable_x64", True)
-    from benchmarks import bench_gc_eval
+    from benchmarks import bench_gc_eval, bench_net
 
     bench_gc_eval.check()
+    bench_net.check()
 
 
 def main() -> None:

@@ -58,24 +58,30 @@ def main() -> int:
     x = rng.normal(0, 1, (S, D))
     y = cli.run(x)
 
-    sess = model.compile_session(S, impl="ref")
+    sess = model.compile_session(S, impl="ref", wire_version=2)
     y_ref = sess.run(x, sess.preprocess(1)[0])
     assert np.array_equal(y, y_ref), "wire output != in-process session"
+    assert cli.shared.negotiated_version == 2, "hello did not land on v2"
     led = cli.shared.ledger
     st = sess.stats
     assert led.offline.by_tag == dict(st.channel_offline.by_tag), \
         "offline wire ledger != metered oracle"
     assert led.online.by_tag == dict(st.channel_online.by_tag), \
         "online wire ledger != metered oracle"
+    lsum = led.summary()
+    assert lsum["rounds_after_coalescing"] < lsum["raw_messages"], \
+        "v2 coalescing did not reduce the wire round count"
     err = float(np.abs(y - model.forward_float(x)).max())
     assert err < 0.25, f"accuracy drifted: {err}"
 
     cli.close()
     lst.close()
     print(f"net smoke OK in {time.perf_counter() - t0:.1f}s: loopback-TCP "
-          f"output bit-identical, ledger == oracle "
+          f"wire v2 output bit-identical, ledger == oracle "
           f"({led.offline.total / 1e6:.1f} MB offline / "
-          f"{led.online.total / 1e6:.2f} MB online), max|err|={err:.4f}",
+          f"{led.online.total / 1e6:.2f} MB online, "
+          f"{lsum['rounds_after_coalescing']} coalesced rounds vs "
+          f"{lsum['raw_messages']} metered msgs), max|err|={err:.4f}",
           flush=True)
 
     # -- gateway: 2 concurrent sessions behind one accept loop, one

@@ -8,6 +8,10 @@ Sources (secret-typed values):
   ``s_mask``, ``he_mask``), the HE secret key (``sk``);
 * calls that mint secret material — ``random_delta``, ``random_labels``,
   ``input_zeros``;
+* garbling keys (``PRNGKey``/``_next_key`` calls, the ``.key`` attribute):
+  a PRG seed that expands to *both* labels of a wire is equivalent to
+  the FreeXOR delta — shipping it hands the evaluator every complement
+  label (the wire-v2 seed-stream rule);
 * draws from a party RNG (``*.rng.integers(...)`` etc.): every RNG draw
   in the protocol is share/mask material by construction.
 
@@ -17,6 +21,14 @@ to transmit by protocol design, whatever went in):
 * ``encode_inputs`` / ``choose_labels`` / ``ot_labels`` /
   ``const_wires_labels`` — bits become active labels (masked by the
   unknown wire-zero/delta);
+* ``stream_seed`` — the mask-label stream seed (wire v2): it expands
+  only to *active* labels the evaluator is entitled to, never a
+  complement pair, so the seed itself is transmittable by design.
+  Note ``pack_seed_stream`` is deliberately NOT a sanitizer — framing a
+  garbling key as a seed-stream record must stay flagged;
+* ``respond`` — ``IknpSender.respond``: each label in the masked pair
+  is one-time-padded by a correlation-robust hash of the receiver's
+  column;
 * ``remask_output`` / ``reconstruct_shared`` / ``output_shared`` /
   ``decode_outputs`` — the share-opening identities;
 * ``ct_pack`` / ``ct_pack_rows`` — HE encryption (simulated);
@@ -51,14 +63,18 @@ from repro.analysis.report import Finding
 SECRET_ATTRS = {
     "sk", "r", "input_zero", "wire_zero", "e_zero",
     "masks", "mask_enc", "s_mask", "he_mask", "r1", "delta",
+    "key",  # the garbling PRNG key: expands to both labels of every wire
 }
-SECRET_CALLS = {"random_delta", "random_labels", "input_zeros"}
+SECRET_CALLS = {"random_delta", "random_labels", "input_zeros",
+                "PRNGKey", "_next_key"}  # garbling-key mints
 RNG_DRAWS = {"integers", "bits", "random", "normal", "uniform", "choice"}
 SANITIZERS = {
     "encode_inputs", "choose_labels", "ot_labels", "const_wires_labels",
     "remask_output", "reconstruct_shared", "output_shared",
     "decode_outputs", "ct_pack", "ct_pack_rows", "deal_matmul_triple",
     "share",  # SS.share: x -> (fresh mask, x - mask), both OTP-uniform
+    "stream_seed",  # v2 mask-label stream: expands to active labels only
+    "respond",  # IknpSender.respond: labels OTP'd by the CRH of t⊕s·u
 }
 PUBLIC_ATTRS = {"tables", "output_perm", "net", "name", "shape", "dtype"}
 SEND_SINKS = {"send", "sendall", "_send_control", "_send_sim",

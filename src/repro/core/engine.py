@@ -76,16 +76,21 @@ class PrivateTransformer:
 
     # ------------------------------------------------------------------
     def compile_session(self, seq_len: int, *, seed: int = 0,
-                        impl: Optional[str] = None):
+                        impl: Optional[str] = None, wire_version: int = 1,
+                        compression: bool = True):
         """Offline/online serving API: trace this model into a
         ``PiTSession`` (see ``repro.core.session``) for one request bucket.
 
         ``session.preprocess(n)`` then runs all garbling/HE/triple work up
         front; each ``session.run(x, bundle)`` is online-phase only.
+        ``wire_version`` selects which wire revision the session's
+        channel meter models (the net layer's byte oracle).
         """
         from repro.core import session as PS
 
-        return PS.compile(self, shape=(seq_len, self.d), seed=seed, impl=impl)
+        return PS.compile(self, shape=(seq_len, self.d), seed=seed,
+                          impl=impl, wire_version=wire_version,
+                          compression=compression)
 
     def _linear_t(self, W, xc, xs):
         """(S, d_in) shares × W (d_out, d_in) -> shares at frac (trunc'd)."""

@@ -117,6 +117,25 @@ def _plan(net: Netlist):
     return plan
 
 
+def _seeded_zero_labels(seeded_inputs, instances: int, r):
+    """Zero-labels for wires whose *active* labels come from a PRG stream.
+
+    ``seeded_inputs`` is ``(wire_ids, bits, seed, counter)``: the garbler
+    commits that the active label of wire ``wire_ids[j]`` in instance
+    ``i`` is stream label ``counter + i*n + j``, so the zero-label must
+    be ``active ^ bits * R``. ``encode_inputs`` on those wires then
+    reproduces the stream exactly — which is what lets the v2 wire ship
+    a 32-byte seed record instead of the label bytes.
+    """
+    wire_ids, bits, seed, counter = seeded_inputs
+    wire_ids = np.asarray(wire_ids, np.int64)
+    n = len(wire_ids)
+    active = LB.stream_labels(seed, counter, instances * n)
+    active = jnp.asarray(active.reshape(instances, n, 4))
+    bits = jnp.asarray(bits, jnp.uint32)
+    return wire_ids, LB.maybe_xor(active, bits, jnp.asarray(r)[:, None, :])
+
+
 def garble(
     net: Netlist,
     key,
@@ -124,6 +143,7 @@ def garble(
     *,
     impl: str = "auto",
     keep_wires: bool = False,
+    seeded_inputs=None,
 ) -> GarbledCircuit:
     """Garble ``instances`` independent copies of ``net``.
 
@@ -131,6 +151,10 @@ def garble(
     place; only the Half-Gate cipher batches go through jnp). Any other
     impl: the whole walk runs inside one jitted device executor. Both
     paths draw labels from the same key stream, so they are bit-exact.
+
+    ``seeded_inputs=(wire_ids, bits, seed, counter)`` presets the listed
+    input wires so their active labels replay a PRG stream (see
+    :func:`_seeded_zero_labels`); all other wires draw fresh labels.
     """
     impl = resolve_impl(impl)
     I, W = instances, net.num_wires
@@ -148,6 +172,10 @@ def garble(
         plan = exe.plan
         r = LB.random_delta(k_r, (I,))
         src_labels = LB.random_labels(k_w, (I, len(plan.source_ids)))
+        if seeded_inputs is not None:
+            wids, zeros = _seeded_zero_labels(seeded_inputs, I, r)
+            src_labels = src_labels.at[
+                :, plan.source_positions(wids)].set(zeros)
         res = exe.garble(src_labels, r, keep_wires=keep_wires)
         src_zero, tables, out_perm = res[:3]
         in_zero = src_zero[:, plan.source_positions(in_ids)]
@@ -164,6 +192,9 @@ def garble(
     src[net.out] = False
     src_ids = np.nonzero(src)[0]
     wire0[:, src_ids] = np.asarray(LB.random_labels(k_w, (I, len(src_ids))))
+    if seeded_inputs is not None:
+        wids, zeros = _seeded_zero_labels(seeded_inputs, I, r)
+        wire0[:, wids] = np.asarray(zeros)
 
     n_and = net.and_count
     tables = np.zeros((I, max(n_and, 1), 2, 4), np.uint32)

@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 LABEL_WORDS = 4
 U32 = jnp.uint32
@@ -44,3 +45,41 @@ def maybe_xor(label, cond, offset):
     """label ^ (cond ? offset : 0)."""
     mask = (-(cond.astype(U32)))[..., None]  # 0x0 or 0xFFFFFFFF
     return label ^ (offset & mask)
+
+
+# ---------------------------------------------------------------------------
+# PRG label streams (v2 wire format)
+# ---------------------------------------------------------------------------
+
+
+def stream_seed(rng: np.random.Generator) -> bytes:
+    """Mint a 16-byte seed for an *active*-label stream.
+
+    The approved way to create a transmittable label seed: the stream it
+    expands to (:func:`stream_labels`) is one label per wire — active
+    labels the receiver is entitled to anyway — never a (zero, one) pair,
+    so shipping the seed reveals nothing the raw stream would not. Do NOT
+    ship garbling keys (``jax.random.PRNGKey`` / ``_next_key()``): those
+    expand to R and both labels of every wire.
+    """
+    return rng.bytes(16)
+
+
+def stream_labels(seed: bytes, counter: int, count: int) -> np.ndarray:
+    """Deterministic label stream: (count, 4) uint32 from (seed, counter).
+
+    Counter-mode Philox keyed by the 128-bit seed; ``counter`` is the
+    stream offset in labels, so both endpoints can derive any window of
+    the stream independently. This is the replay side of a v2 seed-stream
+    segment (:func:`repro.net.wire.pack_seed_stream`).
+    """
+    bg = np.random.Philox(key=int.from_bytes(seed, "little"))
+    # one Philox counter block is 4×64 bits = two labels; an odd label
+    # offset additionally skips one drawn label
+    if counter:
+        bg.advance(counter // 2)
+    skip = counter % 2
+    raw = np.random.Generator(bg).integers(
+        0, 1 << 64, size=(max(count, 0) + skip) * 2, dtype=np.uint64,
+        endpoint=False)
+    return raw[2 * skip:].view(np.uint32).reshape(count, LABEL_WORDS)

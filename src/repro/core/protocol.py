@@ -50,7 +50,14 @@ from repro.core.circuits.shares import (
     output_shared,
 )
 from repro.core.netlist import Netlist
-from repro.core.ot import Channel, ot_labels, OT_BYTES_PER_TRANSFER
+from repro.core.ot import (
+    Channel, choose_labels, ot_labels, OT_BYTES_PER_TRANSFER,
+    BASE_OT_A_BYTES, BASE_OT_B_BYTES, ot_v2_request_bytes,
+    ot_v2_response_bytes,
+)
+from repro.core.wireformat import (
+    SEED_STREAM_BYTES, TABLE_DELTA_WORDS, tables_delta_anchor_bytes,
+)
 
 
 @dataclass
@@ -92,6 +99,10 @@ class Stats:
         self.he_decrypts = 0
         self.per_fn: Dict[str, Dict[str, int]] = {}
         self._depth: Dict[str, int] = {"offline": 0, "online": 0}
+        # v2 wire: the IKNP base-OT exchange happens once per session,
+        # lazily at the first online OT batch — mirrored here so the
+        # oracle meters it exactly once too
+        self.ot_base_metered = False
 
     # -- compatibility views -------------------------------------------
     @property
@@ -217,7 +228,8 @@ class LayerNormCorrelation:
 
 class PiTProtocol:
     def __init__(self, pcfg: PrivacyConfig, *, he_params: Optional[HE.BFVParams] = None,
-                 seed: int = 0, impl: str = "ref"):
+                 seed: int = 0, impl: str = "ref", wire_version: int = 1,
+                 compression: bool = True):
         HE.ensure_x64()
         self.pcfg = pcfg
         self.params = he_params or HE.make_params(
@@ -230,6 +242,15 @@ class PiTProtocol:
         self.rng = np.random.default_rng(seed)
         self.key = jax.random.PRNGKey(seed)
         self.impl = impl
+        #: wire-format revision this protocol *meters* (the net layer
+        #: negotiates the same number at hello): 1 = raw label/table
+        #: streams + sim-OT blocks; 2 = seed streams, delta-encoded table
+        #: batches and IKNP OT (see repro.net.wire). The ledger test
+        #: asserts the wire equals this meter, so both must move together.
+        self.wire_version = wire_version
+        #: v2 sub-knob: seed-stream/delta-table compression of the
+        #: offline garbling stream (IKNP + coalescing stay on when off)
+        self.compression = compression
         self.stats = Stats()
         self.sk, self.pk = HE.keygen(self.params, self._next_key())
         self._netlist_cache: Dict[str, Netlist] = {}
@@ -397,16 +418,33 @@ class PiTProtocol:
         """
         I = instances
         st = self.stats
+        standalone = gcirc is None
         with st.phase("offline"):
             if gcirc is None:
                 gcirc = G.garble(net, self._next_key(), I, impl=self.impl)
             assert gcirc.num_instances == I
             masks = self.rng.integers(0, self.t, (I, n_out), dtype=np.uint64)
             mask_enc = SS.sub_mod(np.zeros_like(masks), masks, self.t)  # t − r
-            st.channel_offline.c2s(int(gcirc.tables.size) * 4, f"tables:{net.name}")
-            # only the output-mask labels are offline-known garbler input;
-            # labels for the live share xc can only flow online (gc_online)
-            st.channel_offline.c2s(I * n_out * self.k * 16, "g-labels")
+            if self.wire_version >= 2 and self.compression:
+                # delta-encoded table batch: each op meters its linear
+                # per-instance share; the slab's fixed anchor + the seed
+                # record are metered at the slab site (gc_slab_offline),
+                # or here when this call IS the slab (no outer batch)
+                rows = max(net.and_count, 1)
+                st.channel_offline.c2s(I * rows * 4 * TABLE_DELTA_WORDS,
+                                       f"tables:{net.name}")
+                if standalone:
+                    st.channel_offline.c2s(
+                        tables_delta_anchor_bytes(net.and_count),
+                        f"tables:{net.name}")
+                    st.channel_offline.c2s(SEED_STREAM_BYTES, "g-labels")
+            else:
+                st.channel_offline.c2s(int(gcirc.tables.size) * 4,
+                                       f"tables:{net.name}")
+                # only the output-mask labels are offline-known garbler
+                # input; labels for the live share xc can only flow online
+                # (gc_online)
+                st.channel_offline.c2s(I * n_out * self.k * 16, "g-labels")
             st.gc_and_gates += net.and_count
             st.gc_gates += net.num_gates
             st.gc_instances_ands += net.and_count * I
@@ -418,6 +456,25 @@ class PiTProtocol:
             f["table_bytes"] += int(gcirc.tables.size) * 4
         return GCCorrelation(net=net, gcirc=gcirc, masks=masks,
                              mask_enc=mask_enc, n_out=n_out)
+
+    def gc_slab_offline(self, net: Netlist) -> None:
+        """Meter the per-slab fixed v2 offline costs (anchor + seed).
+
+        A session garbles ONE slab per distinct netlist and slices it
+        per op (``core/session.py``), while the wire runtime frames one
+        delta-table segment and one seed-stream record per slab. The
+        per-op :meth:`gc_offline` legs meter only their linear
+        per-instance delta share, so the batch-fixed anchor bytes and
+        the 32-byte seed record are metered here, once per slab — the
+        same granularity the garbler frames them at.
+        """
+        if self.wire_version < 2 or not self.compression:
+            return
+        with self.stats.phase("offline"):
+            ch = self.stats.channel_offline
+            ch.c2s(tables_delta_anchor_bytes(net.and_count),
+                   f"tables:{net.name}")
+            ch.c2s(SEED_STREAM_BYTES, "g-labels")
 
     def gc_online(self, corr: GCCorrelation, xc: np.ndarray, xs: np.ndarray,
                   raw_e: Optional[np.ndarray] = None
@@ -444,8 +501,25 @@ class PiTProtocol:
                     [e_bits, _bits_of(rv, k, 1 << k)], axis=1
                 )
             e_zero = G.input_zeros(gcirc, net.evaluator_inputs)
-            e_lab = ot_labels(st.channel_online, e_zero, gcirc.r[:, None, :],
-                              e_bits, tag=f"ot:{net.name}")
+            if self.wire_version >= 2:
+                # real IKNP extension: lazy one-time base OT (the
+                # evaluator is the base-OT *sender*: A is s2c, the κ
+                # B-elements come back c2s), then per-batch column
+                # matrix u (16 B/OT, c2s like the old sim request) and
+                # masked label pairs (32 B/OT s2c, down from 48)
+                ch = st.channel_online
+                if not st.ot_base_metered:
+                    st.ot_base_metered = True
+                    ch.s2c(BASE_OT_A_BYTES, "ot-base")
+                    ch.c2s(BASE_OT_B_BYTES, "ot-base")
+                n_ot = int(np.prod(e_bits.shape))
+                ch.c2s(ot_v2_request_bytes(n_ot), f"ot:{net.name}")
+                ch.s2c(ot_v2_response_bytes(n_ot), f"ot:{net.name}")
+                e_lab = choose_labels(e_zero, gcirc.r[:, None, :], e_bits)
+            else:
+                e_lab = ot_labels(st.channel_online, e_zero,
+                                  gcirc.r[:, None, :], e_bits,
+                                  tag=f"ot:{net.name}")
             # packed active labels: one (wire_ids, (I, n, 4)) pair straight
             # into the device executor — no per-wire host-side dict work
             cw, c_lab = G.const_wires_labels(gcirc)

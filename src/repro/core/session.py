@@ -159,11 +159,14 @@ class PiTSession:
 
     def __init__(self, plan: Plan, weights: Sequence, pcfg: PrivacyConfig,
                  *, seed: int = 0, impl: str = "ref",
-                 protocol: Optional[PiTProtocol] = None):
+                 protocol: Optional[PiTProtocol] = None,
+                 wire_version: int = 1, compression: bool = True):
         assert plan.n_layers == len(weights)
         self.plan = plan
         self.weights = list(weights)
-        self.protocol = protocol or PiTProtocol(pcfg, seed=seed, impl=impl)
+        self.protocol = protocol or PiTProtocol(
+            pcfg, seed=seed, impl=impl, wire_version=wire_version,
+            compression=compression)
         if self.protocol.frac != plan.frac or \
                 self.protocol.pcfg.layernorm_offload != plan.layernorm_offload:
             raise ValueError(
@@ -228,6 +231,11 @@ class PiTSession:
                                impl=p.impl)
                 for name in nets
             }
+            for name in nets:
+                # v2 wire: the batch-fixed costs (delta-table anchor +
+                # seed-stream record) are per garbled slab, not per op —
+                # meter them here, where the slab exists (no-op on v1)
+                p.gc_slab_offline(nets[name])
             offsets = {name: 0 for name in nets}
 
             def take(net: Netlist, I: int) -> G.GarbledCircuit:
@@ -355,7 +363,8 @@ class PiTSession:
 def compile(model, pcfg: Optional[PrivacyConfig] = None,
             shape: Union[int, Tuple[int, ...], None] = None,
             *, seed: Optional[int] = None,
-            impl: Optional[str] = None) -> PiTSession:
+            impl: Optional[str] = None, wire_version: int = 1,
+            compression: bool = True) -> PiTSession:
     """Trace ``model.forward_private`` into a Plan and wrap it in a session.
 
     ``model``: a ``PrivateTransformer`` (or any object with ``d``, ``h``,
@@ -384,4 +393,5 @@ def compile(model, pcfg: Optional[PrivacyConfig] = None,
         plan, model.weights, pcfg,
         seed=seed if seed is not None else 0,
         impl=impl or "auto",
+        wire_version=wire_version, compression=compression,
     )

@@ -49,6 +49,7 @@ import numpy as np
 
 from repro.config import PrivacyConfig
 from repro.core import garble as G
+from repro.core import labels as LB
 from repro.core import ot as OT
 from repro.core import secret_sharing as SS
 from repro.core.netlist import Netlist
@@ -96,8 +97,19 @@ class WireLedger:
     by the same tags the in-process meter uses, so equality with the
     oracle's ``Stats.channel_offline/online.by_tag`` is a direct dict
     compare. ``sim_bytes``/``control_bytes`` are the sideband and
-    ``dir_flips`` counts wire direction alternations (real round
-    structure; the oracle's ``rounds`` counts meter calls).
+    ``dir_flips`` counts wire direction alternations over ALL frames
+    (control and sim included — the hello/bye handshake contributes two
+    flips, which is why this number reads higher than the PROTO-only
+    round structure). ``dir_flips_offline``/``dir_flips_online`` count
+    alternations over PROTO frames of one phase only — the real
+    latency-bearing round structure the LAN model charges — and
+    ``proto_frames_*`` count PROTO frames per phase, i.e. the v2
+    post-coalescing round count (the oracle's ``rounds`` counts meter
+    calls = pre-coalescing segments).
+
+    ``seed_stream_*``/``delta_batches``/``resid_bytes`` count the v2
+    compressed streams (how many label batches were replayed from seeds
+    and how much table residual rode the sim sideband).
 
     One ledger is shared by all endpoints of a party — in the pipelined
     mode the offline and online endpoints mutate it from two threads, so
@@ -110,7 +122,16 @@ class WireLedger:
     control_bytes: int = 0
     frame_bytes: int = 0  # total frame bytes incl. headers, both ways
     dir_flips: int = 0
+    dir_flips_offline: int = 0
+    dir_flips_online: int = 0
+    proto_frames_offline: int = 0
+    proto_frames_online: int = 0
+    seed_stream_segs: int = 0
+    seed_stream_labels: int = 0
+    delta_batches: int = 0
+    resid_bytes: int = 0
     _last_io: int = 0  # +1 sent, -1 received
+    _last_proto: Dict[int, int] = field(default_factory=dict)
     _mutex: threading.Lock = field(default_factory=threading.Lock,
                                    repr=False)
 
@@ -138,9 +159,38 @@ class WireLedger:
             self._last_io = d
             self.frame_bytes += nbytes
 
+    def record_proto_frame(self, phase: int, outgoing: bool,
+                           nbytes: int) -> None:
+        """One PROTO frame on the wire: the post-coalescing round unit."""
+        d = 1 if outgoing else -1
+        with self._mutex:
+            last = self._last_proto.get(phase, 0)
+            if last and d != last:
+                if phase == W.PHASE_OFFLINE:
+                    self.dir_flips_offline += 1
+                else:
+                    self.dir_flips_online += 1
+            self._last_proto[phase] = d
+            if phase == W.PHASE_OFFLINE:
+                self.proto_frames_offline += 1
+            else:
+                self.proto_frames_online += 1
+
     def add_sim(self, nbytes: int) -> None:
         with self._mutex:
             self.sim_bytes += nbytes
+
+    def add_stream(self, labels: int) -> None:
+        """One seed-stream segment replacing ``labels`` raw labels."""
+        with self._mutex:
+            self.seed_stream_segs += 1
+            self.seed_stream_labels += int(labels)
+
+    def add_delta_batch(self, resid_bytes: int) -> None:
+        """One delta-encoded table batch with its sideband residual."""
+        with self._mutex:
+            self.delta_batches += 1
+            self.resid_bytes += int(resid_bytes)
 
     def add_control(self, nbytes: int) -> None:
         with self._mutex:
@@ -162,8 +212,19 @@ class WireLedger:
             self.control_bytes += other.control_bytes
             self.frame_bytes += other.frame_bytes
             self.dir_flips += other.dir_flips
+            self.dir_flips_offline += other.dir_flips_offline
+            self.dir_flips_online += other.dir_flips_online
+            self.proto_frames_offline += other.proto_frames_offline
+            self.proto_frames_online += other.proto_frames_online
+            self.seed_stream_segs += other.seed_stream_segs
+            self.seed_stream_labels += other.seed_stream_labels
+            self.delta_batches += other.delta_batches
+            self.resid_bytes += other.resid_bytes
             if other._last_io:
                 self._last_io = other._last_io
+            for phase, last in other._last_proto.items():
+                if last:
+                    self._last_proto[phase] = last
 
     def summary(self) -> Dict[str, object]:
         return {
@@ -173,6 +234,17 @@ class WireLedger:
             "control_bytes": self.control_bytes,
             "frame_bytes": self.frame_bytes,
             "dir_flips": self.dir_flips,
+            "dir_flips_offline": self.dir_flips_offline,
+            "dir_flips_online": self.dir_flips_online,
+            "proto_frames_offline": self.proto_frames_offline,
+            "proto_frames_online": self.proto_frames_online,
+            "rounds_after_coalescing": (self.proto_frames_offline
+                                        + self.proto_frames_online),
+            "raw_messages": self.offline.rounds + self.online.rounds,
+            "seed_stream_segs": self.seed_stream_segs,
+            "seed_stream_labels": self.seed_stream_labels,
+            "delta_batches": self.delta_batches,
+            "resid_bytes": self.resid_bytes,
             "offline_by_tag": dict(self.offline.by_tag),
             "online_by_tag": dict(self.online.by_tag),
         }
@@ -238,15 +310,28 @@ class _Endpoint:
         self.timeout = timeout
         self.ledger = ledger
         self._seg_queue: Deque[Tuple[int, W.Seg]] = deque()
+        # negotiated at hello; v1 until then (pre-hello traffic is v1)
+        self.wire_version = W.WIRE_VERSION
+        self.compression = True
+        # v2 round coalescing: outgoing PROTO segs buffer here and flush
+        # as ONE frame per consecutive same-phase run — before anything
+        # that must hit the wire in order (CONTROL/SIM sends) and before
+        # any blocking receive (so lockstep can never deadlock on a
+        # buffered segment the peer is waiting for)
+        self._out_buf: List[Tuple[int, W.Seg]] = []
 
     # -- send ----------------------------------------------------------
     def _send_control(self, tag: str, payload=None) -> None:
+        self._flush()
+        # CONTROL stays v1-framed: hello happens before negotiation and
+        # a v1-only peer must be able to parse the handshake
         frame = W.encode_msg(W.KIND_CONTROL, tag, payload)
         self.ledger.add_control(len(frame))
         self.ledger.record_io(True, len(frame))
         self.transport.send(frame)
 
     def _send_sim(self, tag: str, payload, phase: int) -> None:
+        self._flush()
         frame = W.encode_msg(W.KIND_SIM, tag, payload, phase=phase)
         self.ledger.add_sim(len(frame))
         self.ledger.record_io(True, len(frame))
@@ -255,18 +340,40 @@ class _Endpoint:
     def _send_segs(self, segs: Sequence[W.Seg], phase: int) -> None:
         if not segs:
             return
-        frame = W.encode_proto(segs, phase)
+        if self.wire_version >= 2:
+            self._out_buf.extend((phase, s) for s in segs)
+            return
+        self._emit_proto(list(segs), phase)
+
+    def _emit_proto(self, segs: List[W.Seg], phase: int) -> None:
+        frame = W.encode_proto(segs, phase, version=self.wire_version)
         self.ledger.record_segs(phase, segs)
+        self.ledger.record_proto_frame(phase, True, len(frame))
         self.ledger.record_io(True, len(frame))
         self.transport.send(frame)
 
+    def _flush(self) -> None:
+        if not self._out_buf:
+            return
+        buf, self._out_buf = self._out_buf, []
+        i = 0
+        while i < len(buf):
+            phase = buf[i][0]
+            j = i
+            while j < len(buf) and buf[j][0] == phase:
+                j += 1
+            self._emit_proto([s for _, s in buf[i:j]], phase)
+            i = j
+
     # -- recv ----------------------------------------------------------
     def _recv_frame(self) -> W.Msg:
+        self._flush()
         frame = self.transport.recv(timeout=self.timeout)
         msg = W.decode_frame(frame)
         self.ledger.record_io(False, len(frame))
         if msg.kind == W.KIND_PROTO:
             self.ledger.record_segs(msg.phase, msg.segs)
+            self.ledger.record_proto_frame(msg.phase, False, len(frame))
         elif msg.kind == W.KIND_SIM:
             self.ledger.add_sim(len(frame))
         else:
@@ -337,6 +444,8 @@ class SessionState:
         self.bundles: Dict[int, Dict[str, dict]] = {}
         self.ledger = WireLedger()
         self.endpoints = 0  # live transports bound to this session
+        self.wire_version = W.WIRE_VERSION  # negotiated at hello
+        self.iknp = None  # per-session IKNP receiver state (v2, lazy)
         self.created_s = time.perf_counter()
         # accounting (mutated under ``lock``)
         self.prep_requests = 0
@@ -358,6 +467,7 @@ class SessionState:
             out = {
                 "sid": self.sid,
                 "client": self.client,
+                "wire_version": self.wire_version,
                 "prep_requests": self.prep_requests,
                 "run_requests": self.run_requests,
                 "bundles_prepped": self.bundles_prepped,
@@ -388,11 +498,19 @@ class ServerShared:
     """
 
     def __init__(self, model, seq_len: int, *, impl: str = "ref",
-                 seed: int = 104729):
+                 seed: int = 104729, wire_version: int = W.WIRE_V2,
+                 compression: bool = True):
         self.model = model
         self.impl = impl
+        #: highest wire revision this server offers; each hello
+        #: negotiates min(client, server) per session, so a v1-only
+        #: peer still completes runs against a v2 server
+        self.wire_version = wire_version
+        self.compression = compression
         self.plan = compile_plan(model, seq_len)
-        self.protocol = PiTProtocol(model.p.pcfg, seed=seed, impl=impl)
+        self.protocol = PiTProtocol(model.p.pcfg, seed=seed, impl=impl,
+                                    wire_version=wire_version,
+                                    compression=compression)
         self.gc_cache = GarblingCache(self.protocol)
         self.rng = np.random.default_rng(seed)
         self.rng_lock = threading.Lock()
@@ -457,7 +575,8 @@ class ServerShared:
             if op.kind == "layernorm" and p.pcfg.layernorm_offload
         }
         return {
-            "version": W.WIRE_VERSION,
+            "version": self.wire_version,
+            "compression": self.compression,
             "plan": plan_to_spec(self.plan),
             "pcfg": asdict(self.model.p.pcfg),
             "ln_gq": ln_gq,
@@ -552,13 +671,27 @@ class EvaluatorEndpoint(_Endpoint):
 
     # ------------------------------------------------------------------
     def _handle_hello(self, payload) -> None:
-        if payload.get("version") != W.WIRE_VERSION:
+        peer_v = payload.get("version")
+        if not isinstance(peer_v, int) or peer_v < W.WIRE_VERSION:
             raise NetProtocolError(
-                f"wire version mismatch: peer {payload.get('version')}, "
-                f"ours {W.WIRE_VERSION}")
+                f"wire version mismatch: peer {peer_v}, "
+                f"ours {W.WIRE_VERSION}..{self.shared.wire_version}")
+        # pick the highest revision both ends speak: an old v1-only peer
+        # advertises 1 and gets a v1 session; newer peers get v2 frames
+        ver = min(peer_v, self.shared.wire_version)
+        comp = (bool(payload.get("compression", True))
+                and self.shared.compression and ver >= 2)
         extra = self._on_hello(payload)
-        self._send_control("hello-ok",
-                           {**self.shared.hello_payload(), **extra})
+        # _on_hello may have re-bound self.session (gateway resolution)
+        self.wire_version = ver
+        self.compression = comp
+        self.session.wire_version = ver
+        self._send_control("hello-ok", {
+            **self.shared.hello_payload(),
+            **extra,
+            "version": ver,
+            "compression": comp,
+        })
 
     def _on_hello(self, payload) -> dict:
         """Hook: inspect the client hello (id/token), return extra
@@ -604,23 +737,60 @@ class EvaluatorEndpoint(_Endpoint):
                 f"bundle ids {dup or ids} already exist in this session")
         self._send_control("prep-ok", {"n": n})
         nets, per_req = _distinct_nets(p, plan, n=n, cache=sh.gc_cache)
+        v2c = self.wire_version >= 2 and self.compression
 
         slabs: Dict[str, dict] = {}
-        for name, net in nets.items():
-            I_tot = per_req[name] * n
-            n_out, xc_bits, _ = _gc_geom(net, k)
-            tables = W.unpack_tables(self._expect_seg(f"tables:{name}"),
-                                     I_tot, net.and_count)
-            mlab = W.unpack_labels(self._expect_seg("g-labels"),
-                                   (I_tot, n_out * k))
-            meta = self._expect_msg(W.KIND_SIM, f"gc-meta:{name}")
-            slabs[name] = {
-                "tables": tables, "mlab": mlab,
-                "perm": np.asarray(meta["perm"], np.uint32),
-                "cw": np.asarray(meta["cw"], np.int64),
-                "clab": np.asarray(meta["clab"], np.uint32),
-                "off": 0,
-            }
+        if v2c:
+            # the garbler coalesces every slab's segments into one frame
+            # and defers the sideband: pop ALL the PROTO segs first, then
+            # the resid/meta sims, mirroring the send order exactly
+            heads: Dict[str, tuple] = {}
+            for name, net in nets.items():
+                I_tot = per_req[name] * n
+                n_out, _, _ = _gc_geom(net, k)
+                wire_b = self._expect_seg(f"tables:{name}")
+                seed, ctr, count = W.unpack_seed_stream(
+                    self._expect_seg("g-labels"))
+                if ctr != 0 or count != I_tot * n_out * k:
+                    raise NetProtocolError(
+                        f"seed stream for {name!r} does not match the "
+                        f"plan ({ctr}, {count})")
+                heads[name] = (wire_b, seed, count)
+            for name, net in nets.items():
+                I_tot = per_req[name] * n
+                n_out, _, _ = _gc_geom(net, k)
+                wire_b, seed, count = heads[name]
+                resid = self._expect_msg(W.KIND_SIM, f"tables-resid:{name}")
+                meta = self._expect_msg(W.KIND_SIM, f"gc-meta:{name}")
+                tables = W.unpack_tables_delta(wire_b, resid, I_tot,
+                                               net.and_count)
+                mlab = LB.stream_labels(seed, 0, count).reshape(
+                    I_tot, n_out * k, 4)
+                self.ledger.add_stream(count)
+                self.ledger.add_delta_batch(len(resid))
+                slabs[name] = {
+                    "tables": tables, "mlab": mlab,
+                    "perm": np.asarray(meta["perm"], np.uint32),
+                    "cw": np.asarray(meta["cw"], np.int64),
+                    "clab": np.asarray(meta["clab"], np.uint32),
+                    "off": 0,
+                }
+        else:
+            for name, net in nets.items():
+                I_tot = per_req[name] * n
+                n_out, xc_bits, _ = _gc_geom(net, k)
+                tables = W.unpack_tables(self._expect_seg(f"tables:{name}"),
+                                         I_tot, net.and_count)
+                mlab = W.unpack_labels(self._expect_seg("g-labels"),
+                                       (I_tot, n_out * k))
+                meta = self._expect_msg(W.KIND_SIM, f"gc-meta:{name}")
+                slabs[name] = {
+                    "tables": tables, "mlab": mlab,
+                    "perm": np.asarray(meta["perm"], np.uint32),
+                    "cw": np.asarray(meta["cw"], np.int64),
+                    "clab": np.asarray(meta["clab"], np.uint32),
+                    "off": 0,
+                }
 
         resp: List[W.Seg] = []
         new_bundles: Dict[int, Dict[str, dict]] = {}
@@ -767,13 +937,41 @@ class EvaluatorEndpoint(_Endpoint):
             rv = np.mod(np.asarray(raw_e, np.int64), 1 << k).astype(np.uint64)
             e_bits = np.concatenate([e_bits, bits_of(rv, k, 1 << k)], axis=1)
         assert e_bits.shape == (I, n_e)
-        # sim-OT: the receiver's choice-derived messages (logical c2s in
-        # the oracle's ledger; see core/ot.ot_labels)
-        self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_C2S,
-                               W.pack_ot_request(e_bits))], W.PHASE_ONLINE)
-        g_lab = W.unpack_labels(self._expect_seg("g-labels"), (I, xc_bits))
-        e_lab = W.unpack_ot_response(self._expect_seg(f"ot:{net.name}"),
-                                     (I, n_e))
+        if self.wire_version >= 2:
+            # real IKNP extension. One-time base OT, lazily at the
+            # session's first online GC op: this endpoint (the OT
+            # receiver) acts as base-OT *sender* — it sends A, the
+            # garbler answers with the κ B-elements. Then per batch:
+            # column matrix u out, masked label pairs back.
+            sess = self.session
+            g_lab_data = None
+            iknp = sess.iknp
+            if iknp is None:
+                with sh.rng_lock:
+                    iknp = OT.IknpReceiver(sh.rng)
+                self._send_segs([W.Seg("ot-base", W.DIR_S2C,
+                                       iknp.base_msg_a())], W.PHASE_ONLINE)
+                g_lab_data = self._expect_seg("g-labels")
+                iknp.absorb_base_b(self._expect_seg("ot-base"))
+                sess.iknp = iknp
+            u, t_cols = iknp.extend(e_bits)
+            self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_C2S, u)],
+                            W.PHASE_ONLINE)
+            if g_lab_data is None:
+                g_lab_data = self._expect_seg("g-labels")
+            g_lab = W.unpack_labels(g_lab_data, (I, xc_bits))
+            e_lab = iknp.receive(self._expect_seg(f"ot:{net.name}"),
+                                 e_bits, t_cols).reshape(I, n_e, 4)
+        else:
+            # sim-OT: the receiver's choice-derived messages (logical c2s
+            # in the oracle's ledger; see core/ot.ot_labels)
+            self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_C2S,
+                                   W.pack_ot_request(e_bits))],
+                            W.PHASE_ONLINE)
+            g_lab = W.unpack_labels(self._expect_seg("g-labels"),
+                                    (I, xc_bits))
+            e_lab = W.unpack_ot_response(self._expect_seg(f"ot:{net.name}"),
+                                         (I, n_e))
         wire_ids = np.concatenate([
             np.asarray(net.garbler_inputs, np.int64),
             np.asarray(net.evaluator_inputs, np.int64), part["cw"]])
@@ -828,9 +1026,16 @@ class ClientShared:
     """Input-owner state shared by a client's endpoints (offline + online
     pairs in the pipelined mode): protocol, plan, and the bundle pool."""
 
-    def __init__(self, *, seed: int = 0, impl: str = "ref"):
+    def __init__(self, *, seed: int = 0, impl: str = "ref",
+                 wire_version: int = W.WIRE_V2, compression: bool = True):
         self.seed = seed
         self.impl = impl
+        #: highest wire revision this client requests at hello; the
+        #: server replies with min(ours, theirs) — see ``adopt_hello``
+        self.wire_version = wire_version
+        self.compression = compression
+        self.negotiated_version: Optional[int] = None
+        self.negotiated_compression: Optional[bool] = None
         self.protocol: Optional[PiTProtocol] = None
         self.plan: Optional[Plan] = None
         self.ln_gq: Dict[str, np.ndarray] = {}
@@ -840,6 +1045,7 @@ class ClientShared:
         self.bundles: Dict[int, Dict[str, dict]] = {}
         self.order: Deque[int] = deque()
         self.ledger = WireLedger()
+        self.iknp = None  # per-session IKNP sender state (v2, lazy)
         # both endpoints of a pair send the same token, so a gateway can
         # bind them to ONE session/bundle namespace (uuid: two clients
         # with the same seed must still be distinct sessions)
@@ -848,6 +1054,13 @@ class ClientShared:
 
     def adopt_hello(self, payload: dict) -> None:
         sid = payload.get("session")
+        ver = payload.get("version", W.WIRE_VERSION)
+        comp = bool(payload.get("compression", False))
+        if not isinstance(ver, int) or ver < W.WIRE_VERSION \
+                or ver > self.wire_version:
+            raise NetProtocolError(
+                f"server negotiated wire version {ver!r}, outside our "
+                f"supported range {W.WIRE_VERSION}..{self.wire_version}")
         with self.lock:
             if self.plan is not None:  # second endpoint of a pair
                 if plan_to_spec(self.plan) != payload["plan"]:
@@ -858,9 +1071,18 @@ class ClientShared:
                         f"offline/online endpoints landed in different "
                         f"sessions ({self.session_id} vs {sid}) — did the "
                         f"hellos carry the same client token?")
+                if ver != self.negotiated_version \
+                        or comp != self.negotiated_compression:
+                    raise NetProtocolError(
+                        f"offline/online endpoints negotiated different "
+                        f"wire formats (v{self.negotiated_version} vs "
+                        f"v{ver})")
                 return
             pcfg = PrivacyConfig(**payload["pcfg"])
-            self.protocol = PiTProtocol(pcfg, seed=self.seed)
+            self.negotiated_version = ver
+            self.negotiated_compression = comp
+            self.protocol = PiTProtocol(pcfg, seed=self.seed,
+                                        wire_version=ver, compression=comp)
             self.plan = plan_from_spec(payload["plan"])
             self.session_id = sid
             self.ln_gq = {k: np.asarray(v, np.uint64)
@@ -881,8 +1103,11 @@ class GarblerEndpoint(_Endpoint):
 
     def __init__(self, transport: Transport, *,
                  shared: Optional[ClientShared] = None, seed: int = 0,
-                 impl: str = "ref", timeout: Optional[float] = None):
-        shared = shared or ClientShared(seed=seed, impl=impl)
+                 impl: str = "ref", timeout: Optional[float] = None,
+                 wire_version: int = W.WIRE_V2, compression: bool = True):
+        shared = shared or ClientShared(seed=seed, impl=impl,
+                                        wire_version=wire_version,
+                                        compression=compression)
         super().__init__(transport, timeout=timeout, ledger=shared.ledger)
         self.shared = shared
         self._lock = threading.Lock()  # one request at a time per endpoint
@@ -894,11 +1119,14 @@ class GarblerEndpoint(_Endpoint):
         with a retry-after hint, not an error string)."""
         with self._lock:
             self._send_control("hello", {
-                "version": W.WIRE_VERSION,
+                "version": self.shared.wire_version,
+                "compression": self.shared.compression,
                 "client": self.shared.client_token,
             })
             self.shared.adopt_hello(self._expect_msg(W.KIND_CONTROL,
                                                      "hello-ok"))
+            self.wire_version = self.shared.negotiated_version
+            self.compression = bool(self.shared.negotiated_compression)
         return self.shared.plan
 
     def close(self) -> None:
@@ -936,26 +1164,63 @@ class GarblerEndpoint(_Endpoint):
         self._expect_msg(W.KIND_CONTROL, "prep-ok")
 
         nets, per_req = _distinct_nets(p, plan)
+        v2c = self.wire_version >= 2 and self.compression
         slabs: Dict[str, tuple] = {}
+        sims: List[Tuple[str, object]] = []
         for name, net in nets.items():
             I_tot = per_req[name] * n
             n_out, xc_bits, _ = _gc_geom(net, k)
-            gcirc = G.garble(net, p._next_key(), I_tot, impl=sh.impl)
-            masks = sh.rng.integers(0, t, (I_tot, n_out), dtype=np.uint64)
-            mask_enc = SS.sub_mod(np.zeros_like(masks), masks, t)
-            mlab = G.encode_inputs(gcirc, net.garbler_inputs[xc_bits:],
-                                   bits_of(mask_enc, k, t))
+            if v2c:
+                # v2: masks are drawn BEFORE garbling so the mask-wire
+                # active labels can be preset to the PRG stream — the
+                # evaluator replays the same stream from the 32-byte
+                # seed record instead of receiving raw labels, and the
+                # table batch ships delta-encoded (anchor + per-instance
+                # XOR head; the residual rides the sim sideband)
+                masks = sh.rng.integers(0, t, (I_tot, n_out),
+                                        dtype=np.uint64)
+                mask_enc = SS.sub_mod(np.zeros_like(masks), masks, t)
+                seed = LB.stream_seed(sh.rng)
+                gcirc = G.garble(
+                    net, p._next_key(), I_tot, impl=sh.impl,
+                    seeded_inputs=(net.garbler_inputs[xc_bits:],
+                                   bits_of(mask_enc, k, t), seed, 0))
+                wire_b, resid = W.pack_tables_delta(gcirc.tables)
+                self._send_segs([
+                    W.Seg(f"tables:{name}", W.DIR_C2S, wire_b),
+                    W.Seg("g-labels", W.DIR_C2S,
+                          W.pack_seed_stream(seed, 0, I_tot * n_out * k)),
+                ], W.PHASE_OFFLINE)
+                self.ledger.add_stream(I_tot * n_out * k)
+                self.ledger.add_delta_batch(len(resid))
+                sims.append((f"tables-resid:{name}", resid))
+            else:
+                gcirc = G.garble(net, p._next_key(), I_tot, impl=sh.impl)
+                masks = sh.rng.integers(0, t, (I_tot, n_out),
+                                        dtype=np.uint64)
+                mask_enc = SS.sub_mod(np.zeros_like(masks), masks, t)
+                mlab = G.encode_inputs(gcirc, net.garbler_inputs[xc_bits:],
+                                       bits_of(mask_enc, k, t))
+                self._send_segs([
+                    W.Seg(f"tables:{name}", W.DIR_C2S,
+                          W.pack_tables(gcirc.tables)),
+                    W.Seg("g-labels", W.DIR_C2S, W.pack_labels(mlab)),
+                ], W.PHASE_OFFLINE)
             cw, clab = G.const_wires_labels(gcirc)
-            self._send_segs([
-                W.Seg(f"tables:{name}", W.DIR_C2S,
-                      W.pack_tables(gcirc.tables)),
-                W.Seg("g-labels", W.DIR_C2S, W.pack_labels(mlab)),
-            ], W.PHASE_OFFLINE)
-            self._send_sim(f"gc-meta:{name}", {
+            meta = {
                 "perm": np.asarray(gcirc.output_perm),
                 "cw": np.asarray(cw), "clab": np.asarray(clab),
-            }, W.PHASE_OFFLINE)
+            }
+            if v2c:
+                # defer the sideband so all slab segments coalesce into
+                # one offline frame; the evaluator pops every PROTO seg
+                # first, then the sims, in this exact order
+                sims.append((f"gc-meta:{name}", meta))
+            else:
+                self._send_sim(f"gc-meta:{name}", meta, W.PHASE_OFFLINE)
             slabs[name] = (gcirc, masks)
+        for tag, obj in sims:
+            self._send_sim(tag, obj, W.PHASE_OFFLINE)
 
         offsets = {name: 0 for name in nets}
         new_bundles: Dict[int, Dict[str, dict]] = {}
@@ -1118,12 +1383,32 @@ class GarblerEndpoint(_Endpoint):
                                 bits_of(xc, k, t))
         self._send_segs([W.Seg("g-labels", W.DIR_C2S, W.pack_labels(g_lab))],
                         W.PHASE_ONLINE)
-        choice = W.unpack_ot_request(self._expect_seg(f"ot:{net.name}"),
-                                     (I, n_e))
-        e_zero = G.input_zeros(gcirc, net.evaluator_inputs)
-        e_lab = OT.choose_labels(e_zero, gcirc.r[:, None, :], choice)
-        self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_S2C,
-                               W.pack_ot_response(e_lab))], W.PHASE_ONLINE)
+        if self.wire_version >= 2:
+            # IKNP sender leg: answer the one-time base OT if this is
+            # the session's first online GC op, then mask both labels of
+            # every evaluator wire under the extension-matrix hash
+            if sh.iknp is None:
+                a_data = self._expect_seg("ot-base")
+                with sh.lock:
+                    snd = OT.IknpSender(sh.rng)
+                    b_data = snd.base_msg_b(a_data)
+                    sh.iknp = snd
+                self._send_segs([W.Seg("ot-base", W.DIR_C2S, b_data)],
+                                W.PHASE_ONLINE)
+            u_data = self._expect_seg(f"ot:{net.name}")
+            e_zero = G.input_zeros(gcirc, net.evaluator_inputs)
+            y = sh.iknp.respond(u_data, I * n_e, np.asarray(e_zero),
+                                np.asarray(gcirc.r)[:, None, :])
+            self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_S2C, y)],
+                            W.PHASE_ONLINE)
+        else:
+            choice = W.unpack_ot_request(self._expect_seg(f"ot:{net.name}"),
+                                         (I, n_e))
+            e_zero = G.input_zeros(gcirc, net.evaluator_inputs)
+            e_lab = OT.choose_labels(e_zero, gcirc.r[:, None, :], choice)
+            self._send_segs([W.Seg(f"ot:{net.name}", W.DIR_S2C,
+                                   W.pack_ot_response(e_lab))],
+                            W.PHASE_ONLINE)
         return part["masks"]
 
     def _client_layernorm(self, op: OpSpec, part: dict, hc: np.ndarray
@@ -1164,8 +1449,11 @@ class PitNetServer:
     """
 
     def __init__(self, model, seq_len: int, *, impl: str = "ref",
-                 seed: int = 104729):
-        self.shared = ServerShared(model, seq_len, impl=impl, seed=seed)
+                 seed: int = 104729, wire_version: int = W.WIRE_V2,
+                 compression: bool = True):
+        self.shared = ServerShared(model, seq_len, impl=impl, seed=seed,
+                                   wire_version=wire_version,
+                                   compression=compression)
         self.endpoints: List[EvaluatorEndpoint] = []
         self.threads: List[threading.Thread] = []
 

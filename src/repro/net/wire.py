@@ -30,6 +30,25 @@ Layout (all integers little-endian)::
 
 Typed object encoding (``obj``) uses a one-byte type marker; arrays are
 ``'A' | dtype-str | ndim u8 | dims u64* | C-order raw bytes``.
+
+Version 2 (negotiated at hello, v1 remains fully supported) revises the
+PROTO payload encodings only — the frame layout is unchanged except for
+the version byte:
+
+* **seed streams** — label streams whose receiver is *entitled* to the
+  whole stream (the garbler's mask-input labels, which are active labels
+  by construction) ship as a 32-byte ``(seed, counter)`` record; the
+  receiver replays the PRG (:func:`repro.core.labels.stream_labels`).
+* **delta-encoded table batches** — a slab of per-instance garbled
+  tables ships as one full anchor instance plus 8 B/AND-gate
+  per-instance delta records. The 24 B/AND residual needed to invert the
+  delta code travels on the SIM sideband and is ledgered as simulation
+  overhead, like every other stand-in the size oracle models
+  (identity-HE blocks, the reveal sideband).
+* **IKNP OT** — the sim-OT blocks are replaced by a real base-OT +
+  extension-matrix exchange (:mod:`repro.core.ot`): κ=128
+  Chou–Orlandi base OTs at hello-follow-up, then per-batch a 16 B/OT
+  column matrix (receiver→sender) and a 32 B/OT masked-pair response.
 """
 
 from __future__ import annotations
@@ -41,6 +60,8 @@ from typing import List, Sequence, Tuple
 import numpy as np
 
 WIRE_VERSION = 1
+WIRE_V2 = 2
+SUPPORTED_VERSIONS = (WIRE_VERSION, WIRE_V2)
 MAGIC = b"PW"
 
 KIND_CONTROL = 0
@@ -189,6 +210,7 @@ class Msg:
     tag: str = ""
     payload: object = None
     segs: List[Seg] = field(default_factory=list)
+    version: int = WIRE_VERSION
 
 
 def _enc_tag(tag: str) -> bytes:
@@ -197,25 +219,27 @@ def _enc_tag(tag: str) -> bytes:
 
 
 def encode_msg(kind: int, tag: str = "", payload=None,
-               phase: int = PHASE_NONE) -> bytes:
+               phase: int = PHASE_NONE,
+               version: int = WIRE_VERSION) -> bytes:
     """Encode a CONTROL or SIM frame."""
     if kind not in (KIND_CONTROL, KIND_SIM):
         raise WireError("encode_msg is for CONTROL/SIM frames")
     out = bytearray()
-    out += MAGIC + struct.pack("<BBB", WIRE_VERSION, kind, phase)
+    out += MAGIC + struct.pack("<BBB", version, kind, phase)
     out += _enc_tag(tag)
     _enc_obj(out, payload)
     return bytes(out)
 
 
-def encode_proto(segs: Sequence[Seg], phase: int) -> bytes:
+def encode_proto(segs: Sequence[Seg], phase: int,
+                 version: int = WIRE_VERSION) -> bytes:
     """Encode a PROTO frame: a batch of raw tagged segments.
 
     nseg is u32: a preprocess response batches one segment per
     (op × bundle), which clears u16 at production batch sizes.
     """
     out = bytearray()
-    out += MAGIC + struct.pack("<BBB", WIRE_VERSION, KIND_PROTO, phase)
+    out += MAGIC + struct.pack("<BBB", version, KIND_PROTO, phase)
     out += struct.pack("<I", len(segs))
     for s in segs:
         out += struct.pack("<B", s.dir) + _enc_tag(s.tag)
@@ -228,8 +252,9 @@ def decode_frame(data: bytes) -> Msg:
     if bytes(buf[:2]) != MAGIC:
         raise WireError("bad magic")
     ver, kind, phase = struct.unpack_from("<BBB", buf, 2)
-    if ver != WIRE_VERSION:
-        raise WireError(f"wire version {ver} != {WIRE_VERSION}")
+    if ver not in SUPPORTED_VERSIONS:
+        raise WireError(
+            f"wire version {ver} not in {SUPPORTED_VERSIONS}")
     pos = 5
     if kind == KIND_PROTO:
         (nseg,) = struct.unpack_from("<I", buf, pos)
@@ -246,13 +271,14 @@ def decode_frame(data: bytes) -> Msg:
             pos += 8
             segs.append(Seg(tag, d, bytes(buf[pos: pos + n])))
             pos += n
-        return Msg(kind=kind, phase=phase, segs=segs)
+        return Msg(kind=kind, phase=phase, segs=segs, version=ver)
     (tl,) = struct.unpack_from("<H", buf, pos)
     pos += 2
     tag = bytes(buf[pos: pos + tl]).decode("utf-8")
     pos += tl
     payload, pos = _dec_obj(buf, pos)
-    return Msg(kind=kind, phase=phase, tag=tag, payload=payload)
+    return Msg(kind=kind, phase=phase, tag=tag, payload=payload,
+               version=ver)
 
 
 # ---------------------------------------------------------------------------
@@ -385,3 +411,83 @@ def unpack_ot_response(data: bytes, shape: Tuple[int, ...],
     blocks = np.frombuffer(data, np.uint8).reshape(n, per_transfer)
     lab = np.ascontiguousarray(blocks[:, :16]).view(np.uint32)
     return lab.reshape(*shape, 4).copy()
+
+
+# ---------------------------------------------------------------------------
+# v2 payload packers: seed streams + delta-encoded table batches
+# ---------------------------------------------------------------------------
+# The byte-size model is shared with the in-process oracle and lives in
+# repro.core.wireformat (a pure struct/arith module — no cycle); the
+# packers here are the codec side of the same format.
+
+from repro.core.wireformat import (  # noqa: E402  (re-exported)
+    SEED_STREAM_BYTES,
+    TABLE_DELTA_HDR as _TABLE_DELTA_HDR,
+    TABLE_DELTA_WORDS,
+    tables_delta_anchor_bytes,
+    tables_delta_wire_bytes,
+    tables_resid_bytes,
+)
+
+
+def pack_seed_stream(seed: bytes, counter: int, count: int) -> bytes:
+    """A PRG-seeded label stream: replaces ``count`` raw labels.
+
+    ``seed`` is the 16-byte stream seed, ``counter`` the stream offset of
+    the first label, ``count`` how many labels the receiver derives.
+    """
+    if len(seed) != 16:
+        raise WireError("seed stream seed must be 16 bytes")
+    return seed + struct.pack("<QQ", counter, count)
+
+
+def unpack_seed_stream(data: bytes) -> Tuple[bytes, int, int]:
+    if len(data) != SEED_STREAM_BYTES:
+        raise WireError("bad seed stream segment length")
+    counter, count = struct.unpack_from("<QQ", data, 16)
+    return bytes(data[:16]), counter, count
+
+
+def pack_tables_delta(tables) -> Tuple[bytes, bytes]:
+    """Delta-encode a table slab → (PROTO wire bytes, SIM residual).
+
+    Instance 0 ships verbatim as the anchor; instances ``i > 0`` ship
+    their XOR against instance ``i-1``, split into an on-wire head
+    (``TABLE_DELTA_WORDS`` uint32 per AND row pair — the modeled delta
+    record) and a sideband tail. The split is lossless: the receiver
+    reassembles head+tail and undoes the running XOR, so reconstruction
+    is exact while the PROTO channel carries the modeled batch size.
+    """
+    t = np.ascontiguousarray(np.asarray(tables, np.uint32))
+    inst, rows = int(t.shape[0]), int(t.shape[1])
+    words = t.reshape(inst, rows, 8)
+    d = words.copy()
+    if inst > 1:
+        d[1:] ^= words[:-1]
+    wire = bytearray()
+    wire += _TABLE_DELTA_HDR.pack(inst, rows, TABLE_DELTA_WORDS)
+    wire += d[0].tobytes()
+    resid = b""
+    if inst > 1:
+        wire += np.ascontiguousarray(d[1:, :, :TABLE_DELTA_WORDS]).tobytes()
+        resid = np.ascontiguousarray(d[1:, :, TABLE_DELTA_WORDS:]).tobytes()
+    return bytes(wire), resid
+
+
+def unpack_tables_delta(wire: bytes, resid: bytes, instances: int,
+                        n_and: int) -> np.ndarray:
+    """Invert :func:`pack_tables_delta` → tables ``(I, rows, 2, 4)``."""
+    inst, rows, dw = _TABLE_DELTA_HDR.unpack_from(wire, 0)
+    if inst != instances or rows != max(n_and, 1) or dw != TABLE_DELTA_WORDS:
+        raise WireError("table delta header does not match the plan")
+    pos = _TABLE_DELTA_HDR.size
+    d = np.empty((inst, rows, 8), np.uint32)
+    d[0] = np.frombuffer(wire, np.uint32, rows * 8, pos).reshape(rows, 8)
+    if inst > 1:
+        pos += rows * 32
+        head = np.frombuffer(wire, np.uint32, (inst - 1) * rows * dw, pos)
+        d[1:, :, :dw] = head.reshape(inst - 1, rows, dw)
+        tail = np.frombuffer(resid, np.uint32).reshape(inst - 1, rows, 8 - dw)
+        d[1:, :, dw:] = tail
+    tables = np.bitwise_xor.accumulate(d, axis=0)
+    return tables.reshape(inst, rows, 2, 4)

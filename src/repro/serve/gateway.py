@@ -118,9 +118,18 @@ class PitGateway:
     def __init__(self, model, seq_len: int, *, impl: str = "ref",
                  seed: int = 104729, max_sessions: int = 8,
                  pool_cap: int = 4, retry_floor_s: float = 0.05,
-                 shared: Optional[ServerShared] = None):
-        self.shared = shared or ServerShared(model, seq_len, impl=impl,
-                                             seed=seed)
+                 shared: Optional[ServerShared] = None,
+                 wire_version: Optional[int] = None,
+                 compression: Optional[bool] = None):
+        if shared is None:
+            kw = {}
+            if wire_version is not None:
+                kw["wire_version"] = wire_version
+            if compression is not None:
+                kw["compression"] = compression
+            shared = ServerShared(model, seq_len, impl=impl, seed=seed,
+                                  **kw)
+        self.shared = shared
         self.max_sessions = max_sessions
         self.pool_cap = pool_cap
         self.retry_floor_s = retry_floor_s

@@ -1,0 +1,48 @@
+"""Seed-handling fixture for the secret-flow linter (wire v2).
+
+The v2 wire format ships PRG seeds instead of raw label streams, which
+creates a new leak class the linter must split correctly: a seed that
+expands to BOTH labels of a wire (the garbling key) is equivalent to
+the FreeXOR delta — with it on the wire every complement label decodes
+— while the mask-label stream seed expands only to ACTIVE labels the
+evaluator is entitled to, so ``stream_seed``'s result is transmittable
+by protocol design. This module is linted by path only and is never
+imported by the package.
+"""
+
+import jax
+
+from repro.core import labels as LB
+
+
+class SeedyEndpoint:
+    def __init__(self, transport, protocol, rng):
+        self.transport = transport
+        self.p = protocol
+        self.rng = rng
+
+    def leak_garbling_key(self):
+        # the per-netlist garbling key derives both labels of every wire
+        self.transport.send(bytes(self.p._next_key()))
+
+    def leak_root_key(self, seed):
+        # the session root key is every garbling key at once
+        key = jax.random.PRNGKey(seed)
+        self.transport.send(key.tobytes())
+
+    def leak_key_attr(self):
+        # reading the protocol's key attribute is just as fatal
+        self.transport.send(self.p.key.tobytes())
+
+    def leak_key_as_seed_stream(self):
+        # dressing the garbling key up as a v2 seed-stream record must
+        # NOT launder the taint (pack_seed_stream is not a sanitizer)
+        from repro.net import wire as W
+
+        rec = W.pack_seed_stream(bytes(self.p._next_key())[:16], 0, 8)
+        self.transport.send(rec)
+
+    def send_mask_stream_seed_ok(self):
+        # the approved v2 path: a fresh active-label stream seed
+        seed = LB.stream_seed(self.rng)
+        self.transport.send(seed)

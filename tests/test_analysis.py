@@ -312,6 +312,21 @@ def test_secretflow_catches_seeded_leaks():
     assert "send_shared_ok" not in flagged
 
 
+def test_secretflow_splits_seed_classes():
+    """Wire-v2 seed rule: garbling-key seeds (expand to both labels ==
+    the delta) are flagged however they're dressed up; the mask-label
+    stream seed (expands to active labels only) is transmittable."""
+    path = os.path.join(FIXTURES, "leaky_seeds.py")
+    findings = sf_lint_file(path, rel="tests/fixtures/leaky_seeds.py")
+    rules = {(f.rule, f.symbol.rsplit(".", 1)[-1]) for f in findings}
+    assert ("secret-to-wire", "leak_garbling_key") in rules
+    assert ("secret-to-wire", "leak_root_key") in rules
+    assert ("secret-to-wire", "leak_key_attr") in rules
+    assert ("secret-to-wire", "leak_key_as_seed_stream") in rules
+    flagged = {f.symbol.rsplit(".", 1)[-1] for f in findings}
+    assert "send_mask_stream_seed_ok" not in flagged
+
+
 def test_secretflow_quiet_on_shipped_protocol_paths():
     assert run_secretflow(REPO) == []
 

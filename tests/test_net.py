@@ -85,9 +85,42 @@ def test_wire_golden_bytes():
 
 def test_wire_version_rejected():
     frame = bytearray(W.encode_msg(W.KIND_CONTROL, "hello", None))
-    frame[2] = W.WIRE_VERSION + 1
+    frame[2] = max(W.SUPPORTED_VERSIONS) + 1
     with pytest.raises(W.WireError):
         W.decode_frame(bytes(frame))
+
+
+def test_wire_v2_golden_seed_stream():
+    """v2 PROTO framing is golden too: a seed-stream segment is a fixed
+    32-byte (seed, counter, count) record, byte-stable forever."""
+    seg = W.Seg("g-labels", W.DIR_C2S,
+                W.pack_seed_stream(bytes(range(16)), 7, 1234))
+    frame = W.encode_proto([seg], W.PHASE_OFFLINE, version=W.WIRE_V2)
+    assert frame[:2] == b"PW" and frame[2] == W.WIRE_V2
+    assert len(seg.data) == W.SEED_STREAM_BYTES
+    assert hashlib.sha256(frame).hexdigest() == (
+        "1ebcf99cb75583a86a6d8000ae1e3716edf25e4231a1b514eb8f24d9c8d9cb45")
+    msg = W.decode_frame(frame)
+    assert msg.version == W.WIRE_V2
+    assert W.unpack_seed_stream(msg.segs[0].data) == \
+        (bytes(range(16)), 7, 1234)
+    with pytest.raises(W.WireError):
+        W.unpack_seed_stream(seg.data + b"\x00")
+
+
+def test_wire_tables_delta_roundtrip():
+    """Delta batches are lossless and exactly the modeled sizes."""
+    rng = np.random.default_rng(0)
+    for inst, n_and in ((1, 5), (4, 1), (16, 33)):
+        tables = rng.integers(0, 1 << 32, (inst, max(n_and, 1), 2, 4),
+                              dtype=np.uint32)
+        wire, resid = W.pack_tables_delta(tables)
+        assert len(wire) == W.tables_delta_wire_bytes(inst, n_and)
+        assert len(resid) == W.tables_resid_bytes(inst, n_and)
+        got = W.unpack_tables_delta(wire, resid, inst, n_and)
+        assert np.array_equal(got, tables)
+    with pytest.raises(W.WireError):
+        W.unpack_tables_delta(wire, resid, inst + 1, n_and)
 
 
 def test_wire_packers_meter_sizes():
@@ -180,7 +213,7 @@ def netrun():
     y1 = cli.run(x)
     y2 = cli.run(x)
 
-    sess = model.compile_session(S, impl="ref")
+    sess = model.compile_session(S, impl="ref", wire_version=2)
     bundles = sess.preprocess(2)
     y_ref1 = sess.run(x, bundles[0])
     y_ref2 = sess.run(x, bundles[1])
@@ -208,7 +241,37 @@ def test_net_ledger_matches_metered_oracle(netrun):
     assert sled.offline.by_tag == led.offline.by_tag
     assert sled.online.by_tag == led.online.by_tag
     # the sim sideband (decode metadata, reveal) is small and separate
-    assert 0 < led.sim_bytes < 0.02 * (led.offline.total + led.online.total)
+    # once the v2 table-delta residual (a modeled stand-in, like the
+    # identity-HE padding) is taken out
+    assert led.resid_bytes > 0
+    assert 0 < led.sim_bytes - led.resid_bytes \
+        < 0.02 * (led.offline.total + led.online.total)
+
+
+def test_net_v2_negotiated_and_coalesced(netrun):
+    """The pipe pair negotiated v2+compression, streamed seeds, delta
+    batches, and coalesced same-direction segments into fewer frames."""
+    cli, srv = netrun["cli"], netrun["srv"]
+    assert cli.shared.negotiated_version == W.WIRE_V2
+    assert cli.shared.negotiated_compression is True
+    led = cli.shared.ledger
+    s = led.summary()
+    assert led.seed_stream_segs > 0
+    assert led.delta_batches > 0
+    # coalescing: strictly fewer wire flushes than metered messages,
+    # and per-phase PROTO flip counts never exceed the global count
+    # (which also sees the CONTROL handshake frames)
+    assert s["rounds_after_coalescing"] < s["raw_messages"]
+    assert s["dir_flips_offline"] + s["dir_flips_online"] <= s["dir_flips"]
+    # a coalesced flush carries its segments verbatim: per-tag ledger
+    # bytes (recorded seg-by-seg at flush) sum to the phase totals
+    assert sum(led.offline.by_tag.values()) == led.offline.total
+    assert sum(led.online.by_tag.values()) == led.online.total
+    # both ends agree on the coalesced round structure
+    ss = srv.shared.ledger.summary()
+    assert ss["rounds_after_coalescing"] == s["rounds_after_coalescing"]
+    assert ss["dir_flips_offline"] == s["dir_flips_offline"]
+    assert ss["dir_flips_online"] == s["dir_flips_online"]
 
 
 def test_net_bundle_consumed_and_unknown(netrun):
@@ -236,7 +299,7 @@ def test_net_tcp_end_to_end():
     assert loop.wait_accepted(1, timeout=30)
     cli.preprocess(1)
     y = cli.run(x)
-    sess = model.compile_session(S, impl="ref")
+    sess = model.compile_session(S, impl="ref", wire_version=2)
     assert np.array_equal(y, sess.run(x, sess.preprocess(1)[0]))
     led = cli.shared.ledger
     st = sess.stats
@@ -244,6 +307,31 @@ def test_net_tcp_end_to_end():
     assert led.online.by_tag == dict(st.channel_online.by_tag)
     cli.close()
     lst.close()
+
+
+def test_net_v1_peer_negotiates_down():
+    """A v1-pinned client against a v2 server: the hello negotiates the
+    session down to v1 and the run completes with v1 byte accounting."""
+    model = _model(seed=21)
+    rng = np.random.default_rng(22)
+    x = rng.normal(0, 1, (S, D))
+    srv = PitNetServer(model, S, impl="ref")
+    a, b = InProcPipe.make_pair()
+    srv.serve_transport(b, timeout=300)
+    cli = GarblerEndpoint(a, seed=23, impl="ref", timeout=300,
+                          wire_version=1)
+    cli.preprocess(1)
+    y = cli.run(x)
+    assert cli.shared.negotiated_version == 1
+    assert cli.shared.negotiated_compression is False
+    sess = model.compile_session(S, impl="ref")  # v1 oracle
+    assert np.array_equal(y, sess.run(x, sess.preprocess(1)[0]))
+    led = cli.shared.ledger
+    st = sess.stats
+    assert led.offline.by_tag == dict(st.channel_offline.by_tag)
+    assert led.online.by_tag == dict(st.channel_online.by_tag)
+    assert led.seed_stream_segs == 0 and led.delta_batches == 0
+    cli.close()
 
 
 def test_net_full_gc_layernorm():
@@ -254,7 +342,7 @@ def test_net_full_gc_layernorm():
     cli, _ = _pipe_pair(model, seed=11)
     cli.preprocess(1)
     y = cli.run(x)
-    sess = model.compile_session(S, impl="ref")
+    sess = model.compile_session(S, impl="ref", wire_version=2)
     assert np.array_equal(y, sess.run(x, sess.preprocess(1)[0]))
     led = cli.shared.ledger
     st = sess.stats
