@@ -350,6 +350,61 @@ def run(cfg, write=print):
             "pipelined": pipe, "gateway": gw}
 
 
+def _tracer_overhead():
+    """Cost of the ``repro.obs`` instrumentation on the smoke point.
+
+    Two numbers matter:
+
+    * ``traced_overhead_pct`` — wall-clock of one traced in-process
+      smoke-oracle run vs an untraced one (machine-relative,
+      informational: single runs, so noise dominates small deltas).
+    * ``tracing_off_overhead_pct`` — the gated number: (span+instant
+      call sites hit during the smoke run) x (measured per-call cost of
+      a disabled ``obs.span()``/``close()`` pair) as a fraction of the
+      untraced wall-clock. This is deterministic up to the microbench
+      and is what ``--check`` holds below 1%.
+    """
+    from repro import obs
+
+    model = _model(SMOKE)
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (SMOKE["S"], SMOKE["d"]))
+    _oracle(model, SMOKE, x, wire_version=2)  # warm JIT / HE caches
+
+    prev = obs.install(obs.NULL_TRACER)
+    try:
+        t0 = time.perf_counter()
+        _oracle(model, SMOKE, x, wire_version=2)
+        untraced_s = time.perf_counter() - t0
+
+        tr = obs.Tracer()
+        obs.install(tr)
+        t0 = time.perf_counter()
+        _oracle(model, SMOKE, x, wire_version=2)
+        traced_s = time.perf_counter() - t0
+        events = len(tr.finished_spans()) + len(tr.finished_instants())
+
+        obs.install(obs.NULL_TRACER)
+        n = 100_000
+        t0 = time.perf_counter_ns()
+        for _ in range(n):
+            obs.span("x").close()
+        null_span_ns = (time.perf_counter_ns() - t0) / n
+    finally:
+        obs.install(prev)
+
+    off_pct = 100.0 * events * null_span_ns * 1e-9 / max(untraced_s, 1e-9)
+    return {
+        "smoke_untraced_s": round(untraced_s, 4),
+        "smoke_traced_s": round(traced_s, 4),
+        "traced_overhead_pct": round(
+            100.0 * (traced_s - untraced_s) / max(untraced_s, 1e-9), 2),
+        "trace_events": events,
+        "null_span_ns": round(null_span_ns, 1),
+        "tracing_off_overhead_pct": round(off_pct, 4),
+    }
+
+
 def _smoke_oracle():
     """Byte/round counts of the smoke config at both wire versions —
     the deterministic reference ``check()`` ratchets against."""
@@ -365,6 +420,7 @@ def _smoke_oracle():
 def full():
     result = {"bench": "net", **run(FULL, write=lambda m: print(m, flush=True))}
     result["smoke_oracle"] = _smoke_oracle()
+    result["tracer_overhead"] = _tracer_overhead()
     out = Path(__file__).resolve().parents[1] / "BENCH_net.json"
     out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"# wrote {out}", flush=True)
@@ -402,10 +458,19 @@ def check() -> None:
                 f"net ratchet: {ver} {key} grew {w} → {g}"
     assert got["v2"]["offline_bytes"] < got["v1"]["offline_bytes"], \
         "net ratchet: v2 no longer compresses the offline phase"
+    assert "tracer_overhead" in json.loads(path.read_text()), \
+        f"{path} has no tracer_overhead section — rerun the full bench"
+    ov = _tracer_overhead()
+    assert ov["tracing_off_overhead_pct"] < 1.0, \
+        (f"obs instrumentation costs "
+         f"{ov['tracing_off_overhead_pct']:.3f}% of the smoke point with "
+         f"tracing OFF ({ov['trace_events']} call sites x "
+         f"{ov['null_span_ns']:.0f}ns null span) — must stay <1%")
     print(f"net check OK: smoke oracle v1 "
           f"{got['v1']['offline_bytes']}B / v2 "
-          f"{got['v2']['offline_bytes']}B offline within ratchet",
-          flush=True)
+          f"{got['v2']['offline_bytes']}B offline within ratchet; "
+          f"tracing-off overhead {ov['tracing_off_overhead_pct']:.4f}% "
+          f"(<1%)", flush=True)
 
 
 def main() -> None:

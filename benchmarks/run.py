@@ -18,8 +18,12 @@
 a subset of the committed ``BENCH_gc_eval.json`` trajectory and fails on
 a >20% speedup regression; the net gate re-derives the smoke-config wire
 oracle and fails on a >20% byte — or any round-count — regression
-against the committed ``BENCH_net.json`` (CI runs both right after the
-bench smoke).
+against the committed ``BENCH_net.json``, and holds the tracing-off
+cost of the ``repro.obs`` instrumentation below 1% of the smoke point
+(CI runs all of it right after the bench smoke).
+
+``--trace [PATH]`` records the whole suite with ``repro.obs`` and
+exports a Chrome trace_event JSON (default ``bench_trace.json``).
 """
 
 from __future__ import annotations
@@ -44,10 +48,15 @@ def check() -> None:
     bench_net.check()
 
 
-def main() -> None:
+def main(trace: str | None = None) -> None:
     import jax
 
     jax.config.update("jax_enable_x64", True)  # privacy plane (HE uint64)
+    tr = None
+    if trace:
+        from repro import obs
+
+        tr = obs.enable()
     print("name,us_per_call,derived")
     from benchmarks import (
         bench_mult_ands,
@@ -83,6 +92,10 @@ def main() -> None:
             traceback.print_exc()
             print(f"{name}_FAILED,0,{type(e).__name__}:{e}", flush=True)
             failed.append(name)
+    if tr is not None:
+        tr.export(trace)
+        print(f"# wrote trace: {trace} ({len(tr.finished_spans())} spans)",
+              flush=True)
     if failed:
         print(f"# FAILED suites: {failed}", flush=True)
         sys.exit(1)
@@ -93,4 +106,10 @@ if __name__ == "__main__":
     if "--check" in sys.argv:
         check()
     else:
-        main()
+        trace = None
+        if "--trace" in sys.argv:
+            i = sys.argv.index("--trace")
+            nxt = sys.argv[i + 1] if len(sys.argv) > i + 1 else ""
+            trace = nxt if nxt and not nxt.startswith("-") \
+                else "bench_trace.json"
+        main(trace)

@@ -19,6 +19,10 @@ oracle is *asserted* in ``tests/test_net.py`` and the CI TCP smoke.
 
     PYTHONPATH=src python examples/serve_private_bert.py [--requests 3]
     PYTHONPATH=src python examples/serve_private_bert.py --net tcp
+
+``--trace PATH`` records the whole serve (compile/preprocess/run spans,
+per-op protocol spans, wire send/recv when ``--net``) with ``repro.obs``
+and exports a Chrome trace_event JSON plus a per-span-path summary.
 """
 
 import argparse
@@ -26,6 +30,7 @@ from time import perf_counter
 
 import numpy as np
 
+from repro import obs
 from repro.config import PrivacyConfig
 from repro.core.engine import PrivateTransformer, random_weights
 from repro.serve import PrivateRequest, PrivateServeEngine
@@ -133,7 +138,12 @@ def main():
     ap.add_argument("--net", choices=("off", "pipe", "tcp"), default="off",
                     help="off: in-process session; pipe/tcp: real two-party "
                          "endpoints with pipelined offline/online pairs")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export a Chrome trace_event JSON of the serve")
     args = ap.parse_args()
+
+    if args.trace:
+        obs.enable()
 
     rng = np.random.default_rng(1)
     weights = random_weights(rng, args.d, 2 * args.d, args.layers)
@@ -150,6 +160,15 @@ def main():
         serve_in_process(model, args, rng)
     else:
         serve_two_party(model, args, rng)
+
+    if args.trace:
+        tr = obs.current()
+        tr.export(args.trace)
+        print(f"\n--- trace: {len(tr.finished_spans())} spans -> "
+              f"{args.trace} ---")
+        for path, agg in tr.report().items():
+            print(f"  {path:44s} n={agg['count']:<4d} "
+                  f"total={agg['total_s']:.3f}s mean={agg['mean_s']:.4f}s")
 
 
 if __name__ == "__main__":

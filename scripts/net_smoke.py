@@ -3,7 +3,13 @@ TCP on a tiny model, plus a multi-client PitGateway pass (two concurrent
 sessions, one killed mid-session), with a hard timeout so a deadlocked
 socket fails the build fast instead of hanging the runner.
 
-    PYTHONPATH=src python scripts/net_smoke.py [--timeout 180]
+    PYTHONPATH=src python scripts/net_smoke.py [--timeout 180] \\
+        [--trace trace.json]
+
+``--trace PATH`` records the whole smoke (both parties + the gateway
+pass) with ``repro.obs`` and exports a Chrome trace_event JSON —
+validated in CI by ``scripts/trace_check.py`` and uploaded as an
+artifact.
 """
 
 import argparse
@@ -16,6 +22,8 @@ def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--timeout", type=int, default=180,
                     help="hard wall-clock limit (SIGALRM) in seconds")
+    ap.add_argument("--trace", metavar="PATH", default=None,
+                    help="export a Chrome trace_event JSON of the smoke")
     args = ap.parse_args()
 
     def die(signum, frame):
@@ -33,6 +41,11 @@ def main() -> int:
 
     jax.config.update("jax_enable_x64", True)
     import numpy as np
+
+    from repro import obs
+
+    if args.trace:
+        obs.enable()
 
     from repro.config import PrivacyConfig
     from repro.core.engine import PrivateTransformer, random_weights
@@ -115,6 +128,12 @@ def main() -> int:
           f"2 sessions muxed, mid-session kill returned "
           f"{gst['bundles_returned']} bundle, shared cache "
           f"{cache['slabs']} slabs / {cache['hits']} hits", flush=True)
+    if args.trace:
+        tr = obs.current()
+        tr.export(args.trace)
+        rep = tr.report()
+        print(f"trace: {len(tr.finished_spans())} spans / "
+              f"{len(rep)} span paths -> {args.trace}", flush=True)
     signal.alarm(0)
     return 0
 

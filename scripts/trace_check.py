@@ -1,0 +1,112 @@
+#!/usr/bin/env python
+"""Validate a Chrome trace_event JSON emitted by ``repro.obs``.
+
+Checks (CI gate for the net-smoke trace artifact):
+
+1. well-formed: a JSON object with a ``traceEvents`` list, every event
+   carrying name/ph/ts/pid/tid, ``ts`` numeric and non-negative;
+2. balanced: B/E duration events pair up per (pid, tid) as a proper
+   stack, with matching names (``i`` instant events are exempt);
+3. no secret-looking attribute keys or payload-like values: ``args``
+   must be scalars (sizes/tags/counts), and no key may look like key /
+   seed / label / mask / delta / secret material. This is the artifact-
+   side mirror of the ``secretflow`` span-sink rule.
+
+Exit codes: 0 clean, 1 findings, 2 unreadable/malformed input.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+import sys
+
+REQUIRED_FIELDS = ("name", "ph", "ts", "pid", "tid")
+KNOWN_PHASES = {"B", "E", "i", "X", "M"}
+#: attribute keys that suggest secret material in a trace
+SECRET_KEY_RE = re.compile(
+    r"(^|_)(key|seed|label|labels|mask|masks|delta|secret|sk|payload|"
+    r"r1|wire_zero|input_zero)($|_)", re.IGNORECASE)
+SCALARS = (int, float, str, bool, type(None))
+#: longer string values are payload-shaped, not a tag/name
+MAX_STR_ATTR = 200
+
+
+def check_events(doc) -> list:
+    problems = []
+    if not isinstance(doc, dict) or not isinstance(
+            doc.get("traceEvents"), list):
+        return ["top level must be an object with a 'traceEvents' list"]
+    stacks = {}
+    for i, ev in enumerate(doc["traceEvents"]):
+        where = f"event {i}"
+        if not isinstance(ev, dict):
+            problems.append(f"{where}: not an object")
+            continue
+        missing = [f for f in REQUIRED_FIELDS if f not in ev]
+        if missing:
+            problems.append(f"{where}: missing fields {missing}")
+            continue
+        where = f"event {i} ({ev['name']!r})"
+        if ev["ph"] not in KNOWN_PHASES:
+            problems.append(f"{where}: unknown phase {ev['ph']!r}")
+        if not isinstance(ev["ts"], (int, float)) or ev["ts"] < 0:
+            problems.append(f"{where}: bad ts {ev['ts']!r}")
+        args = ev.get("args", {})
+        if not isinstance(args, dict):
+            problems.append(f"{where}: args must be an object")
+            args = {}
+        for k, v in args.items():
+            if SECRET_KEY_RE.search(str(k)):
+                problems.append(
+                    f"{where}: secret-looking attribute key {k!r}")
+            if not isinstance(v, SCALARS):
+                problems.append(
+                    f"{where}: non-scalar attribute {k!r} "
+                    f"({type(v).__name__}) — payload-shaped")
+            elif isinstance(v, str) and len(v) > MAX_STR_ATTR:
+                problems.append(
+                    f"{where}: oversized string attribute {k!r} "
+                    f"({len(v)} chars) — payload-shaped")
+        if ev["ph"] == "B":
+            stacks.setdefault((ev["pid"], ev["tid"]), []).append(
+                (ev["name"], i))
+        elif ev["ph"] == "E":
+            stack = stacks.setdefault((ev["pid"], ev["tid"]), [])
+            if not stack:
+                problems.append(f"{where}: E without a matching B")
+            else:
+                name, bi = stack.pop()
+                if name != ev["name"]:
+                    problems.append(
+                        f"{where}: E closes {name!r} opened at event {bi}")
+    for (pid, tid), stack in stacks.items():
+        for name, bi in stack:
+            problems.append(
+                f"unclosed B event {bi} ({name!r}) on pid={pid} tid={tid}")
+    return problems
+
+
+def main(argv) -> int:
+    if len(argv) != 2:
+        print("usage: trace_check.py TRACE.json", file=sys.stderr)
+        return 2
+    try:
+        with open(argv[1]) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"trace_check: cannot read {argv[1]}: {e}", file=sys.stderr)
+        return 2
+    problems = check_events(doc)
+    if problems:
+        for p in problems:
+            print(f"trace_check: {p}")
+        print(f"trace_check: {len(problems)} problem(s) in {argv[1]}")
+        return 1
+    n = len(doc["traceEvents"])
+    print(f"trace_check: ok ({n} events, {argv[1]})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

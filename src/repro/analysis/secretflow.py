@@ -41,7 +41,9 @@ the transmittable part of a ``GarbledCircuit``.
 
 Sinks: transport sends (``send``/``sendall``/``_send_control``/
 ``_send_sim``/``_send_segs``/``write``), log calls (``print``,
-``logging``/``logger``/``log``/``warnings`` methods), and exception
+``logging``/``logger``/``log``/``warnings`` methods), trace-span
+attributes (``obs.span``/``instant``/``timer`` — traces are exported
+artifacts, so a span attribute is a log-grade channel), and exception
 construction. A separate rule (``exc-to-wire``) flags *any* exception
 text or traceback flowing into a send — exception reprs interpolate
 values, so shipping them to the peer is an exfiltration channel even
@@ -80,6 +82,10 @@ PUBLIC_ATTRS = {"tables", "output_perm", "net", "name", "shape", "dtype"}
 SEND_SINKS = {"send", "sendall", "_send_control", "_send_sim",
               "_send_segs", "send_msg", "write"}
 LOG_RECEIVERS = {"logging", "logger", "log", "warnings"}
+#: tracing sinks (repro.obs): span attributes are exported to trace
+#: artifacts, so they are a log-grade exfiltration channel — sizes,
+#: tags and counts only, never label/mask/key material
+SPAN_SINKS = {"span", "instant", "timer"}
 
 #: files the CI lint covers by default (repo-relative)
 DEFAULT_PATHS = (
@@ -91,6 +97,8 @@ DEFAULT_PATHS = (
     "src/repro/serve/errors.py",
     "src/repro/serve/gateway.py",
     "src/repro/serve/private_engine.py",
+    "src/repro/obs/__init__.py",
+    "src/repro/obs/tracer.py",
 )
 
 
@@ -266,6 +274,16 @@ class _FunctionTaint:
                         f"exception text/traceback sent to the peer via "
                         f"{name}() — exception reprs interpolate values "
                         f"and can embed secrets"))
+                    break
+        if name in SPAN_SINKS:
+            for a in args:
+                if self.is_tainted(a):
+                    self.findings.append(self._finding(
+                        "secret-to-span", node,
+                        f"secret-derived value recorded as a span "
+                        f"attribute via {name}() — traces are exported "
+                        f"artifacts; record sizes/tags/counts, never "
+                        f"payloads"))
                     break
         is_log = name == "print" or (
             isinstance(node.func, ast.Attribute)

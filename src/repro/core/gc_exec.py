@@ -82,6 +82,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax import lax
 
+from repro import obs
 from repro.core.netlist import (
     LATENCY_MAX_INSTANCES,
     LevelPlan,
@@ -380,7 +381,12 @@ class LevelExecutor:
 
     def evaluate(self, active, tables) -> jnp.ndarray:
         self.n_eval_calls += 1
-        return self._eval(jnp.asarray(active), jnp.asarray(tables))
+        # host-side dispatch boundary: the span must never cross into the
+        # jitted body (jit_hygiene), so it wraps the executable call only
+        with obs.span("gc_exec.evaluate",
+                      netlist=getattr(self.plan._net, "name", "") or "",
+                      instances=self.instances, impl=self.impl):
+            return self._eval(jnp.asarray(active), jnp.asarray(tables))
 
     # ------------------------------------------------------------------
     # garble
@@ -491,8 +497,13 @@ class LevelExecutor:
                 "keep_wires needs the full wire store: use a "
                 "compact=False plan (rows are recycled here)")
         self.n_garble_calls += 1
-        return self._garble(jnp.asarray(src_labels), jnp.asarray(r),
-                            keep_wires=keep_wires)
+        # host-side dispatch boundary (see evaluate): span stays outside
+        # the jitted walk
+        with obs.span("gc_exec.garble",
+                      netlist=getattr(self.plan._net, "name", "") or "",
+                      instances=self.instances, impl=self.impl):
+            return self._garble(jnp.asarray(src_labels), jnp.asarray(r),
+                                keep_wires=keep_wires)
 
 
 def get_executor(net: Netlist, instances: int, impl: str,

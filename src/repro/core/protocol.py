@@ -31,7 +31,6 @@ from __future__ import annotations
 import math
 from contextlib import contextmanager
 from dataclasses import dataclass, field
-from time import perf_counter
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -39,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.config import PrivacyConfig
+from repro import obs
 from repro.core import garble as G
 from repro.core import he as HE
 from repro.core import secret_sharing as SS
@@ -83,8 +83,8 @@ class Stats:
     (``offline`` or ``online``) through the :meth:`phase` context manager
     rather than ad-hoc field mutation; ``channel_offline`` /
     ``t_offline_s`` etc. remain as read-only compatibility views. Timing
-    uses ``perf_counter`` (monotonic) and is re-entrant: nested ``phase``
-    blocks of the same name accumulate wall time exactly once.
+    is span-backed (``obs.timer``, monotonic) and re-entrant: nested
+    ``phase`` blocks of the same name accumulate wall time exactly once.
     """
 
     def __init__(self):
@@ -135,16 +135,24 @@ class Stats:
 
     @contextmanager
     def phase(self, name: str):
-        """Time a block into the named phase (outermost block wins)."""
+        """Time a block into the named phase (outermost block wins).
+
+        Span-backed: the outermost block opens an ``obs.timer`` span, so
+        with tracing on every phase block shows up in the trace (and op
+        spans opened inside nest under it); with tracing off the timer
+        is an unrecorded monotonic measurement — either way ``t_s``
+        accumulates exactly once per outermost block.
+        """
         ph = self._phase(name)
         self._depth[name] += 1
-        t0 = perf_counter() if self._depth[name] == 1 else None
+        sp = obs.timer(name) if self._depth[name] == 1 else None
         try:
             yield ph
         finally:
             self._depth[name] -= 1
-            if t0 is not None:
-                ph.t_s += perf_counter() - t0
+            if sp is not None:
+                sp.close()
+                ph.t_s += sp.elapsed_s
 
     def comm_snapshot(self) -> Dict[str, Dict[str, object]]:
         """Copy of both phase ledgers (for before/after diffing in tests)."""
@@ -305,7 +313,8 @@ class PiTProtocol:
         be None."""
         Wq, Wmod = quantized if quantized is not None else self.quantize_weight(W)
         d_out, d_in = Wq.shape
-        with self.stats.phase("offline"):
+        with self.stats.phase("offline"), \
+                obs.span("linear_offline", d_out=int(d_out), d_in=int(d_in)):
             r1 = self.rng.integers(0, self.t, x_shape, dtype=np.uint64)
             ct_count = math.ceil(r1.size / self.params.n)
             ch = self.stats.channel_offline
@@ -339,7 +348,8 @@ class PiTProtocol:
     def linear_online(self, corr: LinearCorrelation, x_c, x_s
                       ) -> Tuple[np.ndarray, np.ndarray]:
         """Online half: server computes W(x − R1) + s_mask (+ b)."""
-        with self.stats.phase("online"):
+        with self.stats.phase("online"), \
+                obs.span("linear_online", n=int(np.asarray(x_c).size)):
             x_open = SS.sub_mod(SS.add_mod(x_c, x_s, self.t), corr.r1, self.t)
             # (client sends x_c − r1; server adds its share → x − r1 opened)
             self.stats.channel_online.c2s(x_open.size * 8, "x-minus-r")
@@ -365,14 +375,16 @@ class PiTProtocol:
     # ------------------------------------------------------------------
     def beaver_offline(self, m: int, k: int, n: int) -> BeaverCorrelation:
         """Deal one (m,k)×(k,n) matmul triple (HE-based in production)."""
-        with self.stats.phase("offline"):
+        with self.stats.phase("offline"), \
+                obs.span("beaver_offline", m=m, k=k, n=n):
             trip = SS.deal_matmul_triple(self.rng, m, k, n, self.t)
             self.stats.channel_offline.s2c((m * k + k * n + m * n) * 8, "beaver")
         return BeaverCorrelation(trip)
 
     def beaver_online(self, corr: BeaverCorrelation, xc, xs, yc, ys
                       ) -> Tuple[np.ndarray, np.ndarray]:
-        with self.stats.phase("online"):
+        with self.stats.phase("online"), \
+                obs.span("beaver_online", m=int(np.asarray(xc).shape[0])):
             z1, z2, opened = SS.beaver_matmul(xc, xs, yc, ys, corr.trip, self.t)
             self.stats.channel_online.c2s(opened // 2, "beaver-open")
             self.stats.channel_online.s2c(opened // 2, "beaver-open")
@@ -419,7 +431,10 @@ class PiTProtocol:
         I = instances
         st = self.stats
         standalone = gcirc is None
-        with st.phase("offline"):
+        with st.phase("offline"), \
+                obs.span("gc_offline", netlist=net.name, instances=I,
+                         and_gates=net.and_count,
+                         garbles_here=standalone):
             if gcirc is None:
                 gcirc = G.garble(net, self._next_key(), I, impl=self.impl)
             assert gcirc.num_instances == I
@@ -470,7 +485,8 @@ class PiTProtocol:
         """
         if self.wire_version < 2 or not self.compression:
             return
-        with self.stats.phase("offline"):
+        with self.stats.phase("offline"), \
+                obs.span("gc_slab_offline", netlist=net.name):
             ch = self.stats.channel_offline
             ch.c2s(tables_delta_anchor_bytes(net.and_count),
                    f"tables:{net.name}")
@@ -483,7 +499,9 @@ class PiTProtocol:
         net, gcirc = corr.net, corr.gcirc
         k = self.k
         st = self.stats
-        with st.phase("online"):
+        with st.phase("online"), \
+                obs.span("gc_online", netlist=net.name,
+                         instances=int(np.asarray(xc).shape[0])):
             g_bits = np.concatenate(
                 [_bits_of(xc, k, self.t), _bits_of(corr.mask_enc, k, self.t)],
                 axis=1,
@@ -658,7 +676,8 @@ class PiTProtocol:
                                         raw_e=raw, in_scale=in_scale)
 
         # ---- APINT Fig. 4, offline legs -------------------------------
-        with st.phase("offline"):
+        with st.phase("offline"), \
+                obs.span("layernorm_offline", n=n, instances=I):
             inv_n = int(round((1 << f) / n))
             gq = SS.encode_fx(np.asarray(gamma), f, t)
             bq = SS.encode_fx(np.asarray(beta), f, t)
@@ -683,7 +702,9 @@ class PiTProtocol:
             return oc, os_
 
         # ---- APINT Fig. 4 ⑦–⑬, online legs ----------------------------
-        with st.phase("online"):
+        with st.phase("online"), \
+                obs.span("layernorm_online", n=int(xc.shape[1]),
+                         instances=int(xc.shape[0])):
             I, n = xc.shape
             f = self.frac
             in_scale = corr.in_scale

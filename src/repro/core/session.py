@@ -30,6 +30,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.config import PrivacyConfig
+from repro import obs
 from repro.core import garble as G
 from repro.core import secret_sharing as SS
 from repro.core.netlist import Netlist
@@ -217,7 +218,8 @@ class PiTSession:
             raise ValueError("preprocess needs n >= 1")
         p = self.protocol
         plan = self.plan
-        with p.stats.phase("offline"):
+        with obs.span("preprocess", plan=plan.plan_id, bundles=n), \
+                p.stats.phase("offline"):
             # ---- one garbling call per distinct netlist ----------------
             gc_ops = [(op, self._gc_net(op), plan.gc_instances(op))
                       for op in plan.ops if op.kind in GC_KINDS]
@@ -226,11 +228,13 @@ class PiTSession:
             for _, net, I in gc_ops:
                 per_req[net.name] = per_req.get(net.name, 0) + I
                 nets[net.name] = net
-            slabs = {
-                name: G.garble(nets[name], p._next_key(), per_req[name] * n,
-                               impl=p.impl)
-                for name in nets
-            }
+            slabs = {}
+            for name in nets:
+                with obs.span("garble", netlist=name,
+                              instances=per_req[name] * n):
+                    slabs[name] = G.garble(
+                        nets[name], p._next_key(), per_req[name] * n,
+                        impl=p.impl)
             for name in nets:
                 # v2 wire: the batch-fixed costs (delta-table anchor +
                 # seed-stream record) are per garbled slab, not per op —
@@ -309,7 +313,9 @@ class PiTSession:
         bundle.consumed = True
         p = self.protocol
         plan = self.plan
-        with p.stats.phase("online"):
+        with obs.span("run", plan=plan.plan_id,
+                      bundle_id=bundle.bundle_id), \
+                p.stats.phase("online"):
             regs: Dict[str, Tuple[np.ndarray, np.ndarray]] = {}
             regs["x"] = p.share_input(x)
             for op in plan.ops:
@@ -387,7 +393,8 @@ def compile(model, pcfg: Optional[PrivacyConfig] = None,
             raise ValueError(f"shape {shape} does not match model d={model.d}")
     else:
         seq_len = int(shape)
-    plan = compile_plan(model, seq_len)
+    with obs.span("compile", seq_len=seq_len, d=int(model.d)):
+        plan = compile_plan(model, seq_len)
     pcfg = pcfg or model.p.pcfg
     return PiTSession(
         plan, model.weights, pcfg,

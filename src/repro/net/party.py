@@ -48,6 +48,7 @@ from typing import Deque, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.config import PrivacyConfig
+from repro import obs
 from repro.core import garble as G
 from repro.core import labels as LB
 from repro.core import ot as OT
@@ -227,27 +228,32 @@ class WireLedger:
                     self._last_proto[phase] = last
 
     def summary(self) -> Dict[str, object]:
-        return {
-            "offline_bytes": self.offline.total,
-            "online_bytes": self.online.total,
-            "sim_bytes": self.sim_bytes,
-            "control_bytes": self.control_bytes,
-            "frame_bytes": self.frame_bytes,
-            "dir_flips": self.dir_flips,
-            "dir_flips_offline": self.dir_flips_offline,
-            "dir_flips_online": self.dir_flips_online,
-            "proto_frames_offline": self.proto_frames_offline,
-            "proto_frames_online": self.proto_frames_online,
-            "rounds_after_coalescing": (self.proto_frames_offline
-                                        + self.proto_frames_online),
-            "raw_messages": self.offline.rounds + self.online.rounds,
-            "seed_stream_segs": self.seed_stream_segs,
-            "seed_stream_labels": self.seed_stream_labels,
-            "delta_batches": self.delta_batches,
-            "resid_bytes": self.resid_bytes,
-            "offline_by_tag": dict(self.offline.by_tag),
-            "online_by_tag": dict(self.online.by_tag),
-        }
+        # consistent snapshot: endpoint threads mutate every field below
+        # under ``_mutex``, so the reader must hold it too — without it a
+        # poll racing a ``record_segs`` can see a frame counted in
+        # ``frame_bytes`` but not yet in its phase channel
+        with self._mutex:
+            return {
+                "offline_bytes": self.offline.total,
+                "online_bytes": self.online.total,
+                "sim_bytes": self.sim_bytes,
+                "control_bytes": self.control_bytes,
+                "frame_bytes": self.frame_bytes,
+                "dir_flips": self.dir_flips,
+                "dir_flips_offline": self.dir_flips_offline,
+                "dir_flips_online": self.dir_flips_online,
+                "proto_frames_offline": self.proto_frames_offline,
+                "proto_frames_online": self.proto_frames_online,
+                "rounds_after_coalescing": (self.proto_frames_offline
+                                            + self.proto_frames_online),
+                "raw_messages": self.offline.rounds + self.online.rounds,
+                "seed_stream_segs": self.seed_stream_segs,
+                "seed_stream_labels": self.seed_stream_labels,
+                "delta_batches": self.delta_batches,
+                "resid_bytes": self.resid_bytes,
+                "offline_by_tag": dict(self.offline.by_tag),
+                "online_by_tag": dict(self.online.by_tag),
+            }
 
 
 def _gc_geom(net: Netlist, k: int) -> Tuple[int, int, int]:
@@ -303,6 +309,24 @@ def _write_reg(regs: Dict[str, np.ndarray], shapes, ref: RegRef,
 # ---------------------------------------------------------------------------
 
 
+_PHASE_NAMES = {W.PHASE_OFFLINE: "offline", W.PHASE_ONLINE: "online"}
+
+
+def _trace_segs(phase: int, segs: Sequence[W.Seg], direction: str) -> None:
+    """Mirror a ledger ``record_segs`` into the trace, one instant per
+    segment, carrying the SAME (phase, tag, byte-count) the ledger
+    records — so the trace reconciles against ``WireLedger.by_tag``
+    exactly, segment by segment. Attributes are sizes and tags only,
+    never the segment payload."""
+    tr = obs.current()
+    if not tr.enabled:
+        return
+    ph = _PHASE_NAMES.get(phase, str(phase))
+    for s in segs:
+        tr.instant("wire:seg", tag=s.tag, bytes=len(s.data), phase=ph,
+                   dir=direction)
+
+
 class _Endpoint:
     def __init__(self, transport: Transport, *, timeout: Optional[float],
                  ledger: WireLedger):
@@ -346,33 +370,41 @@ class _Endpoint:
         self._emit_proto(list(segs), phase)
 
     def _emit_proto(self, segs: List[W.Seg], phase: int) -> None:
-        frame = W.encode_proto(segs, phase, version=self.wire_version)
-        self.ledger.record_segs(phase, segs)
-        self.ledger.record_proto_frame(phase, True, len(frame))
-        self.ledger.record_io(True, len(frame))
-        self.transport.send(frame)
+        with obs.span("wire.send", phase=_PHASE_NAMES.get(phase, str(phase)),
+                      segs=len(segs)) as sp:
+            frame = W.encode_proto(segs, phase, version=self.wire_version)
+            sp.set(bytes=len(frame))
+            self.ledger.record_segs(phase, segs)
+            _trace_segs(phase, segs, "send")
+            self.ledger.record_proto_frame(phase, True, len(frame))
+            self.ledger.record_io(True, len(frame))
+            self.transport.send(frame)
 
     def _flush(self) -> None:
         if not self._out_buf:
             return
         buf, self._out_buf = self._out_buf, []
-        i = 0
-        while i < len(buf):
-            phase = buf[i][0]
-            j = i
-            while j < len(buf) and buf[j][0] == phase:
-                j += 1
-            self._emit_proto([s for _, s in buf[i:j]], phase)
-            i = j
+        with obs.span("wire.flush", segs=len(buf)):
+            i = 0
+            while i < len(buf):
+                phase = buf[i][0]
+                j = i
+                while j < len(buf) and buf[j][0] == phase:
+                    j += 1
+                self._emit_proto([s for _, s in buf[i:j]], phase)
+                i = j
 
     # -- recv ----------------------------------------------------------
     def _recv_frame(self) -> W.Msg:
         self._flush()
-        frame = self.transport.recv(timeout=self.timeout)
-        msg = W.decode_frame(frame)
+        with obs.span("wire.recv") as sp:
+            frame = self.transport.recv(timeout=self.timeout)
+            msg = W.decode_frame(frame)
+        sp.set(bytes=len(frame), kind=msg.kind)
         self.ledger.record_io(False, len(frame))
         if msg.kind == W.KIND_PROTO:
             self.ledger.record_segs(msg.phase, msg.segs)
+            _trace_segs(msg.phase, msg.segs, "recv")
             self.ledger.record_proto_frame(msg.phase, False, len(frame))
         elif msg.kind == W.KIND_SIM:
             self.ledger.add_sim(len(frame))
@@ -462,7 +494,7 @@ class SessionState:
     def summary(self) -> Dict[str, object]:
         """Per-session rate/byte accounting on top of the wire ledger."""
         dt = max(time.perf_counter() - self.created_s, 1e-9)
-        led = self.ledger.summary()
+        led = self.ledger.summary()  # snapshot under the ledger mutex
         with self.lock:
             out = {
                 "sid": self.sid,
@@ -636,9 +668,13 @@ class EvaluatorEndpoint(_Endpoint):
                 if msg.tag == "hello":
                     self._handle_hello(msg.payload)
                 elif msg.tag == "prep":
-                    self._handle_prep(msg.payload)
+                    with obs.span("offline", role="evaluator",
+                                  sid=self.session.sid):
+                        self._handle_prep(msg.payload)
                 elif msg.tag == "run":
-                    self._handle_run(msg.payload)
+                    with obs.span("online", role="evaluator",
+                                  sid=self.session.sid):
+                        self._handle_run(msg.payload)
                 else:
                     raise NetProtocolError(f"unknown request {msg.tag!r}")
             except TransportClosed:
@@ -685,7 +721,8 @@ class EvaluatorEndpoint(_Endpoint):
         # _on_hello may have re-bound self.session (gateway resolution)
         self.wire_version = ver
         self.compression = comp
-        self.session.wire_version = ver
+        with self.session.lock:  # readers (stats pollers) snapshot it
+            self.session.wire_version = ver
         self._send_control("hello-ok", {
             **self.shared.hello_payload(),
             **extra,
@@ -875,44 +912,47 @@ class EvaluatorEndpoint(_Endpoint):
         for op in plan.ops:
             part = sparts[op.name]
             rd = [_read_reg(regs, ref) for ref in op.reads]
-            if op.kind == "linear":
-                xo_c = W.unpack_u64(self._expect_seg("x-minus-r"),
-                                    rd[0].shape)
-                x_open = SS.add_mod(xo_c, rd[0], t)
-                wx = SS.matmul_mod(x_open, sh.weight_mod(op).T, t)
-                out = SS.add_mod(wx, part["s_mask"], t)
-            elif op.kind == "beaver_matmul":
-                Es = SS.sub_mod(rd[0], part["a2"], t)
-                Fs = SS.sub_mod(rd[1], part["b2"], t)
-                self._send_segs([W.Seg("beaver-open", W.DIR_S2C,
-                                       W.pack_u64(Es) + W.pack_u64(Fs))],
-                                W.PHASE_ONLINE)
-                data = self._expect_seg("beaver-open")
-                Ec = W.unpack_u64(data[: Es.size * 8], Es.shape)
-                Fc = W.unpack_u64(data[Es.size * 8:], Fs.shape)
-                E = SS.add_mod(Ec, Es, t)
-                F = SS.add_mod(Fc, Fs, t)
-                out = SS.add_mod(
-                    SS.add_mod(part["c2"], SS.matmul_mod(E, part["b2"], t), t),
-                    SS.matmul_mod(part["a2"], F, t), t)
-            elif op.kind == "trunc":
-                flat = rd[0].reshape(-1, 1)
-                out = self._server_gc(part, flat, None).reshape(rd[0].shape)
-            elif op.kind == "gc_apply":
-                if op.attrs["circuit"] == "softmax":
-                    out = self._server_gc(part, rd[0], None)
-                else:
+            with obs.span("op:" + op.kind, op=op.name):
+                if op.kind == "linear":
+                    xo_c = W.unpack_u64(self._expect_seg("x-minus-r"),
+                                        rd[0].shape)
+                    x_open = SS.add_mod(xo_c, rd[0], t)
+                    wx = SS.matmul_mod(x_open, sh.weight_mod(op).T, t)
+                    out = SS.add_mod(wx, part["s_mask"], t)
+                elif op.kind == "beaver_matmul":
+                    Es = SS.sub_mod(rd[0], part["a2"], t)
+                    Fs = SS.sub_mod(rd[1], part["b2"], t)
+                    self._send_segs([W.Seg("beaver-open", W.DIR_S2C,
+                                           W.pack_u64(Es) + W.pack_u64(Fs))],
+                                    W.PHASE_ONLINE)
+                    data = self._expect_seg("beaver-open")
+                    Ec = W.unpack_u64(data[: Es.size * 8], Es.shape)
+                    Fc = W.unpack_u64(data[Es.size * 8:], Fs.shape)
+                    E = SS.add_mod(Ec, Es, t)
+                    F = SS.add_mod(Fc, Fs, t)
+                    out = SS.add_mod(
+                        SS.add_mod(part["c2"],
+                                   SS.matmul_mod(E, part["b2"], t), t),
+                        SS.matmul_mod(part["a2"], F, t), t)
+                elif op.kind == "trunc":
                     flat = rd[0].reshape(-1, 1)
                     out = self._server_gc(part, flat, None
                                           ).reshape(rd[0].shape)
-            elif op.kind == "layernorm":
-                hs = rd[0]
-                for extra in rd[1:]:
-                    hs = SS.add_mod(hs, extra, t)
-                out = self._server_layernorm(op, part, hs)
-            else:
-                raise NetProtocolError(f"unknown op kind {op.kind!r}")
-            _write_reg(regs, plan.reg_shapes, op.write, out)
+                elif op.kind == "gc_apply":
+                    if op.attrs["circuit"] == "softmax":
+                        out = self._server_gc(part, rd[0], None)
+                    else:
+                        flat = rd[0].reshape(-1, 1)
+                        out = self._server_gc(part, flat, None
+                                              ).reshape(rd[0].shape)
+                elif op.kind == "layernorm":
+                    hs = rd[0]
+                    for extra in rd[1:]:
+                        hs = SS.add_mod(hs, extra, t)
+                    out = self._server_layernorm(op, part, hs)
+                else:
+                    raise NetProtocolError(f"unknown op kind {op.kind!r}")
+                _write_reg(regs, plan.reg_shapes, op.write, out)
 
         self._send_sim("reveal", {"s": regs[plan.output_reg]},
                        W.PHASE_ONLINE)
@@ -1148,7 +1188,7 @@ class GarblerEndpoint(_Endpoint):
         sh = self.shared
         if sh.plan is None:
             self.handshake()
-        with self._lock:
+        with self._lock, obs.span("offline", role="garbler", bundles=n):
             return self._preprocess_locked(n)
 
     def _preprocess_locked(self, n: int) -> List[int]:
@@ -1181,10 +1221,11 @@ class GarblerEndpoint(_Endpoint):
                                         dtype=np.uint64)
                 mask_enc = SS.sub_mod(np.zeros_like(masks), masks, t)
                 seed = LB.stream_seed(sh.rng)
-                gcirc = G.garble(
-                    net, p._next_key(), I_tot, impl=sh.impl,
-                    seeded_inputs=(net.garbler_inputs[xc_bits:],
-                                   bits_of(mask_enc, k, t), seed, 0))
+                with obs.span("garble", netlist=name, instances=I_tot):
+                    gcirc = G.garble(
+                        net, p._next_key(), I_tot, impl=sh.impl,
+                        seeded_inputs=(net.garbler_inputs[xc_bits:],
+                                       bits_of(mask_enc, k, t), seed, 0))
                 wire_b, resid = W.pack_tables_delta(gcirc.tables)
                 self._send_segs([
                     W.Seg(f"tables:{name}", W.DIR_C2S, wire_b),
@@ -1195,7 +1236,9 @@ class GarblerEndpoint(_Endpoint):
                 self.ledger.add_delta_batch(len(resid))
                 sims.append((f"tables-resid:{name}", resid))
             else:
-                gcirc = G.garble(net, p._next_key(), I_tot, impl=sh.impl)
+                with obs.span("garble", netlist=name, instances=I_tot):
+                    gcirc = G.garble(net, p._next_key(), I_tot,
+                                     impl=sh.impl)
                 masks = sh.rng.integers(0, t, (I_tot, n_out),
                                         dtype=np.uint64)
                 mask_enc = SS.sub_mod(np.zeros_like(masks), masks, t)
@@ -1304,7 +1347,8 @@ class GarblerEndpoint(_Endpoint):
             if parts is None:
                 raise NetProtocolError(
                     f"bundle {bundle_id} unknown or already consumed")
-            return self._run_locked(x, bundle_id, parts)
+            with obs.span("online", role="garbler", bundle_id=bundle_id):
+                return self._run_locked(x, bundle_id, parts)
 
     def _run_locked(self, x, bundle_id: int, parts) -> np.ndarray:
         sh = self.shared
@@ -1323,44 +1367,45 @@ class GarblerEndpoint(_Endpoint):
         for op in plan.ops:
             part = parts[op.name]
             rd = [_read_reg(regs, ref) for ref in op.reads]
-            if op.kind == "linear":
-                xo = SS.sub_mod(rd[0], part["r1"], t)
-                self._send_segs([W.Seg("x-minus-r", W.DIR_C2S,
-                                       W.pack_u64(xo))], W.PHASE_ONLINE)
-                out = part["client_y"]
-            elif op.kind == "beaver_matmul":
-                Ec = SS.sub_mod(rd[0], part["a1"], t)
-                Fc = SS.sub_mod(rd[1], part["b1"], t)
-                self._send_segs([W.Seg("beaver-open", W.DIR_C2S,
-                                       W.pack_u64(Ec) + W.pack_u64(Fc))],
-                                W.PHASE_ONLINE)
-                data = self._expect_seg("beaver-open")
-                Es = W.unpack_u64(data[: Ec.size * 8], Ec.shape)
-                Fs = W.unpack_u64(data[Ec.size * 8:], Fc.shape)
-                E = SS.add_mod(Ec, Es, t)
-                F = SS.add_mod(Fc, Fs, t)
-                out = SS.add_mod(
-                    SS.add_mod(part["c1"],
-                               SS.matmul_mod(E, part["b1"], t), t),
-                    SS.add_mod(SS.matmul_mod(part["a1"], F, t),
-                               SS.matmul_mod(E, F, t), t), t)
-            elif op.kind == "trunc":
-                flat = rd[0].reshape(-1, 1)
-                out = self._client_gc(part, flat).reshape(rd[0].shape)
-            elif op.kind == "gc_apply":
-                if op.attrs["circuit"] == "softmax":
-                    out = self._client_gc(part, rd[0])
-                else:
+            with obs.span("op:" + op.kind, op=op.name):
+                if op.kind == "linear":
+                    xo = SS.sub_mod(rd[0], part["r1"], t)
+                    self._send_segs([W.Seg("x-minus-r", W.DIR_C2S,
+                                           W.pack_u64(xo))], W.PHASE_ONLINE)
+                    out = part["client_y"]
+                elif op.kind == "beaver_matmul":
+                    Ec = SS.sub_mod(rd[0], part["a1"], t)
+                    Fc = SS.sub_mod(rd[1], part["b1"], t)
+                    self._send_segs([W.Seg("beaver-open", W.DIR_C2S,
+                                           W.pack_u64(Ec) + W.pack_u64(Fc))],
+                                    W.PHASE_ONLINE)
+                    data = self._expect_seg("beaver-open")
+                    Es = W.unpack_u64(data[: Ec.size * 8], Ec.shape)
+                    Fs = W.unpack_u64(data[Ec.size * 8:], Fc.shape)
+                    E = SS.add_mod(Ec, Es, t)
+                    F = SS.add_mod(Fc, Fs, t)
+                    out = SS.add_mod(
+                        SS.add_mod(part["c1"],
+                                   SS.matmul_mod(E, part["b1"], t), t),
+                        SS.add_mod(SS.matmul_mod(part["a1"], F, t),
+                                   SS.matmul_mod(E, F, t), t), t)
+                elif op.kind == "trunc":
                     flat = rd[0].reshape(-1, 1)
                     out = self._client_gc(part, flat).reshape(rd[0].shape)
-            elif op.kind == "layernorm":
-                hc = rd[0]
-                for extra in rd[1:]:
-                    hc = SS.add_mod(hc, extra, t)
-                out = self._client_layernorm(op, part, hc)
-            else:
-                raise NetProtocolError(f"unknown op kind {op.kind!r}")
-            _write_reg(regs, plan.reg_shapes, op.write, out)
+                elif op.kind == "gc_apply":
+                    if op.attrs["circuit"] == "softmax":
+                        out = self._client_gc(part, rd[0])
+                    else:
+                        flat = rd[0].reshape(-1, 1)
+                        out = self._client_gc(part, flat).reshape(rd[0].shape)
+                elif op.kind == "layernorm":
+                    hc = rd[0]
+                    for extra in rd[1:]:
+                        hc = SS.add_mod(hc, extra, t)
+                    out = self._client_layernorm(op, part, hc)
+                else:
+                    raise NetProtocolError(f"unknown op kind {op.kind!r}")
+                _write_reg(regs, plan.reg_shapes, op.write, out)
 
         xs_out = np.asarray(
             self._expect_msg(W.KIND_SIM, "reveal")["s"], np.uint64)

@@ -41,6 +41,7 @@ import threading
 import time
 from typing import Dict, List, Optional, Tuple
 
+from repro import obs
 from repro.net.party import (
     EvaluatorEndpoint,
     ServerShared,
@@ -92,12 +93,14 @@ class _GatewayEndpoint(EvaluatorEndpoint):
         before = sess.bundles_prepped
         n = int(payload["n"])
         self.gateway._prep_begin(n)
-        t0 = time.perf_counter()
+        # span-backed timing: the gateway's prep EWMA reads the span's
+        # duration instead of a hand-rolled perf_counter delta
+        sp = obs.timer("gateway.prep", sid=sess.sid, bundles=n)
         try:
             super()._handle_prep(payload)
         finally:
             prepped = sess.bundles_prepped > before
-            self.gateway._prep_end(n, time.perf_counter() - t0,
+            self.gateway._prep_end(n, sp.close().elapsed_s,
                                    counted=prepped)
 
     def _on_disconnect(self) -> None:
@@ -272,23 +275,35 @@ class PitGateway:
 
     def stats(self) -> Dict[str, object]:
         """Gateway-wide accounting: admission counters, the shared
-        garbling cache, and per-session summaries (live + torn down)."""
+        garbling cache, and per-session summaries (live + torn down).
+
+        The whole snapshot is taken under the gateway lock — admission
+        counters (``sessions_admitted``/``sessions_shed``/
+        ``bundles_returned``) are mutated by endpoint threads under the
+        same lock, so a reader polling while sessions churn always sees
+        a consistent set (hammer-tested in ``tests/test_gateway.py``).
+        Per-session summaries snapshot under each session's own lock and
+        ledger mutex inside it.
+        """
         with self._lock:
             live = [s.summary() for s in self._sessions.values()]
             closed = list(self._closed)
             inflight = self._prep_inflight
             ewma = self._prep_ewma_s
+            admitted = self.sessions_admitted
+            sess_shed = self.sessions_shed
+            returned = self.bundles_returned
         sessions = closed + live
         dt = max(time.perf_counter() - self._started_s, 1e-9)
         consumed = sum(s["bundles_consumed"] for s in sessions)
         return {
             "sessions_active": len(live),
-            "sessions_admitted": self.sessions_admitted,
-            "sessions_shed": self.sessions_shed,
+            "sessions_admitted": admitted,
+            "sessions_shed": sess_shed,
             "prep_sheds": sum(s["sheds"] for s in sessions),
             "bundles_prepped": sum(s["bundles_prepped"] for s in sessions),
             "bundles_consumed": consumed,
-            "bundles_returned": self.bundles_returned,
+            "bundles_returned": returned,
             "bundles_outstanding": sum(s["bundles_outstanding"]
                                        for s in sessions),
             "prep_inflight": inflight,
@@ -297,6 +312,41 @@ class PitGateway:
             "bundles_per_s": round(consumed / dt, 3),
             "garbling_cache": self.shared.gc_cache.summary(),
             "sessions": sessions,
+        }
+
+    def metrics(self) -> Dict[str, object]:
+        """Scrape-able counters snapshot in a stable schema.
+
+        ``counters`` are monotonic over the gateway's lifetime (totals
+        include torn-down sessions); ``gauges`` are instantaneous;
+        ``spans`` are the current tracer's per-span-path aggregates
+        (count/total/mean/max seconds — empty when tracing is off). The
+        top-level key set is the scrape contract: keys are only ever
+        added, never renamed or removed within ``pit.gateway.v1``.
+        """
+        st = self.stats()
+        tr = obs.current()
+        return {
+            "schema": "pit.gateway.v1",
+            "counters": {
+                "sessions_admitted": st["sessions_admitted"],
+                "sessions_shed": st["sessions_shed"],
+                "prep_sheds": st["prep_sheds"],
+                "bundles_prepped": st["bundles_prepped"],
+                "bundles_consumed": st["bundles_consumed"],
+                "bundles_returned": st["bundles_returned"],
+                "garbling_cache_hits": st["garbling_cache"]["hits"],
+                "garbling_cache_misses": st["garbling_cache"]["misses"],
+            },
+            "gauges": {
+                "sessions_active": st["sessions_active"],
+                "bundles_outstanding": st["bundles_outstanding"],
+                "prep_inflight": st["prep_inflight"],
+                "prep_ewma_s": st["prep_ewma_s"],
+                "bundles_per_s": st["bundles_per_s"],
+                "elapsed_s": st["elapsed_s"],
+            },
+            "spans": tr.report(),
         }
 
     def join(self, timeout: Optional[float] = None) -> None:

@@ -23,13 +23,13 @@ object, and correctness beats concurrency there.
 from __future__ import annotations
 
 import threading
-import time
 from collections import deque
 from dataclasses import dataclass
 from typing import Deque, Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.core.session import PiTSession, PreprocessedBundle, compile
 from repro.serve.errors import BundlePoolEmpty
 
@@ -127,9 +127,13 @@ class PrivateServeEngine:
         elapsed = 0.0
         try:
             with self._bucket_lock(seq_len):
-                t0 = time.perf_counter()
-                bundles = sess.preprocess(count)
-                elapsed = time.perf_counter() - t0
+                # span-backed timing: the EWMA reads the span's duration
+                # (one timing path with the tracer instead of a
+                # hand-rolled perf_counter delta)
+                with obs.timer("engine.prep", bucket=seq_len,
+                               bundles=count) as sp:
+                    bundles = sess.preprocess(count)
+                elapsed = sp.elapsed_s
                 self._pools[seq_len].extend(bundles)
                 return len(self._pools[seq_len])
         finally:
@@ -146,12 +150,13 @@ class PrivateServeEngine:
             deficit = self.pool_target - len(self._pools[seq_len])
             if deficit > 0:
                 self._note_refill(seq_len, deficit)
-                t0 = time.perf_counter()
+                sp = obs.timer("engine.prep", bucket=seq_len,
+                               bundles=deficit)
                 try:
                     self._pools[seq_len].extend(sess.preprocess(deficit))
                 finally:
                     self._note_prepped(seq_len, deficit,
-                                       time.perf_counter() - t0)
+                                       sp.close().elapsed_s)
             return len(self._pools[seq_len])
 
     def refill_async(self, seq_len: int, count: Optional[int] = None
@@ -294,12 +299,14 @@ class NetPrivateServeEngine:
             return round(max(self._refill_pending, 1) * self._prep_ewma_s, 3)
 
     def _preprocess_timed(self, count: int) -> None:
+        # span-backed: the prep EWMA reads the span's duration
+        sp = obs.timer("engine.prep", bundles=count)
         elapsed = 0.0
         try:
-            t0 = time.perf_counter()
             self.offline.preprocess(count)
-            elapsed = time.perf_counter() - t0
+            elapsed = sp.close().elapsed_s
         finally:
+            sp.close()
             self._note_prepped(count, elapsed)
 
     def preprocess(self, count: int) -> int:

@@ -1,0 +1,45 @@
+"""Deliberately leaky tracing call sites — secret-flow linter fixture.
+
+Traces are exported artifacts (Chrome JSON on disk, CI artifacts), so a
+span attribute is a log-grade exfiltration channel. Each ``leak_*``
+method seeds one ``secret-to-span`` violation; the ``span_*_ok`` methods
+record exactly the size/tag/count attributes the instrumented runtime
+uses and must stay quiet. Linted by path only, never imported.
+"""
+
+from repro import obs
+
+
+class LeakySpans:
+    def __init__(self, gcirc, rng):
+        self.gcirc = gcirc
+        self.rng = rng
+
+    def leak_labels_to_span(self, net):
+        # label bytes as a span attribute: decodes the whole circuit once
+        # the trace file leaves the machine
+        with obs.span("garble", netlist=net.name,
+                      labels=self.gcirc.input_zero.tobytes()):
+            pass
+
+    def leak_delta_to_instant(self):
+        obs.instant("wire:seg", r=self.gcirc.r.tobytes())
+
+    def leak_mask_via_arith_to_timer(self, t):
+        # taint must survive the arithmetic rewrite of the mask
+        masks = self.rng.integers(0, t, 8, dtype="uint64")
+        negated = (t - masks) % t
+        sp = obs.timer("prep", mask0=int(negated[0]))
+        sp.close()
+
+    def span_sizes_ok(self, net, seg):
+        # the shipped instrumentation: names, counts and byte sizes of
+        # public projections — must NOT be flagged
+        with obs.span("gc_offline", netlist=net.name,
+                      and_gates=net.and_count,
+                      table_bytes=int(self.gcirc.tables.size) * 4):
+            obs.instant("wire:seg", tag=seg.tag, bytes=len(seg.data))
+
+    def span_counts_ok(self, n):
+        with obs.span("offline", bundles=n, role="garbler"):
+            pass

@@ -327,6 +327,21 @@ def test_secretflow_splits_seed_classes():
     assert "send_mask_stream_seed_ok" not in flagged
 
 
+def test_secretflow_flags_span_attribute_leaks():
+    """A span recording label/mask/delta bytes is flagged
+    (``secret-to-span``); the shipped size/tag/count attributes are
+    not."""
+    path = os.path.join(FIXTURES, "leaky_spans.py")
+    findings = sf_lint_file(path, rel="tests/fixtures/leaky_spans.py")
+    rules = {(f.rule, f.symbol.rsplit(".", 1)[-1]) for f in findings}
+    assert ("secret-to-span", "leak_labels_to_span") in rules
+    assert ("secret-to-span", "leak_delta_to_instant") in rules
+    assert ("secret-to-span", "leak_mask_via_arith_to_timer") in rules
+    flagged = {f.symbol.rsplit(".", 1)[-1] for f in findings}
+    assert "span_sizes_ok" not in flagged
+    assert "span_counts_ok" not in flagged
+
+
 def test_secretflow_quiet_on_shipped_protocol_paths():
     assert run_secretflow(REPO) == []
 

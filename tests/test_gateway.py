@@ -224,6 +224,89 @@ def test_gateway_session_cap_sheds_with_hint():
     lst.close()
 
 
+# ---------------------------------------------------------------------------
+# stats()/metrics() thread-safety: consistent snapshots under churn
+# ---------------------------------------------------------------------------
+
+
+def test_gateway_stats_metrics_consistent_under_hammer():
+    """N client threads mutate the gateway (admits, preps, runs,
+    teardowns) while a reader polls ``stats()``/``metrics()`` in a tight
+    loop. Every snapshot must be internally consistent (counters taken
+    under the gateway lock, per-session summaries under each session
+    lock) and the metrics counters monotonic across polls — a torn read
+    shows up as a violated identity or a counter going backwards."""
+    model = _model(seed=51)
+    gw = PitGateway(model, S, impl="ref", max_sessions=8, pool_cap=8)
+    stop = threading.Event()
+    problems = []
+    polls = [0]
+    counter_keys = {"sessions_admitted", "sessions_shed", "prep_sheds",
+                    "bundles_prepped", "bundles_consumed",
+                    "bundles_returned", "garbling_cache_hits",
+                    "garbling_cache_misses"}
+    gauge_keys = {"sessions_active", "bundles_outstanding", "prep_inflight",
+                  "prep_ewma_s", "bundles_per_s", "elapsed_s"}
+
+    def reader():
+        last = None
+        while not stop.is_set():
+            st = gw.stats()
+            m = gw.metrics()
+            try:
+                assert m["schema"] == "pit.gateway.v1"
+                assert set(m["counters"]) == counter_keys  # stable schema
+                assert set(m["gauges"]) == gauge_keys
+                assert isinstance(m["spans"], dict)
+                assert st["sessions_active"] <= st["sessions_admitted"]
+                # every prepped bundle is outstanding, consumed, or
+                # returned — an identity only a consistent snapshot keeps
+                assert st["bundles_prepped"] == (
+                    st["bundles_consumed"] + st["bundles_outstanding"]
+                    + sum(s["bundles_returned"] for s in st["sessions"]))
+                if last is not None:
+                    for k in counter_keys:
+                        assert m["counters"][k] >= last[k], \
+                            f"counter {k} went backwards"
+                last = m["counters"]
+                polls[0] += 1
+            except AssertionError as e:
+                problems.append(str(e))
+                stop.set()
+                return
+
+    rd = threading.Thread(target=reader)
+    rd.start()
+
+    rng = np.random.default_rng(52)
+    xs = [rng.normal(0, 1, (S, D)) for _ in range(3)]
+    errs = []
+
+    def client(i):
+        try:
+            eng = _inproc_engine(gw, seed=60 + i)
+            eng.preprocess(1)
+            eng.run(xs[i])
+            eng.close()  # clean teardown churns the session table too
+        except Exception as e:
+            errs.append((i, e))
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(3)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join(timeout=240)
+    stop.set()
+    rd.join(timeout=30)
+    assert not errs, errs
+    assert not problems, problems
+    assert polls[0] > 10, "reader barely ran — hammer proved nothing"
+    st = gw.stats()
+    assert st["sessions_admitted"] == 3
+    assert st["bundles_consumed"] == 3
+    gw.close()
+
+
 def test_gateway_bounded_pool_sheds_before_garbling():
     model = _model(seed=41)
     gw = PitGateway(model, S, impl="ref", max_sessions=2, pool_cap=1)
