@@ -405,6 +405,68 @@ def _tracer_overhead():
     }
 
 
+def _resilience_overhead():
+    """Cost of the fault-injection wrapper with faults DISABLED.
+
+    The resilience stack is meant to stay on in production, so an
+    empty-schedule :class:`FaultyTransport` must be near-free: its hot
+    path adds one locked counter increment + dict miss per transport op.
+    Two numbers:
+
+    * ``wrapped_overhead_pct`` — wall-clock of one wrapped smoke run vs
+      a plain one (machine-relative, informational: single runs, noise
+      dominates small deltas).
+    * ``faults_off_overhead_pct`` — the gated number: (transport ops in
+      the smoke run) x (measured per-op cost of the wrapper's no-fault
+      bookkeeping) as a fraction of the plain wall-clock. Deterministic
+      up to the microbench; ``--check`` holds it below 2%.
+    """
+    from repro.net import (FaultyTransport, GarblerEndpoint, InProcPipe,
+                           PitNetServer)
+
+    model = _model(SMOKE)
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 1, (SMOKE["S"], SMOKE["d"]))
+    _oracle(model, SMOKE, x, wire_version=2)  # warm JIT / HE caches
+
+    def run_once(wrap):
+        srv = PitNetServer(model, SMOKE["S"], impl="ref")
+        a, b = InProcPipe.make_pair()
+        srv.serve_transport(b, timeout=600)
+        t = FaultyTransport(a) if wrap else a
+        cli = GarblerEndpoint(t, seed=7, impl="ref", timeout=600)
+        t0 = time.perf_counter()
+        cli.preprocess(1)
+        y = cli.run(x)
+        elapsed = time.perf_counter() - t0
+        ops = t.op if wrap else (a.frames_sent + a.frames_recv)
+        cli.close()
+        return y, elapsed, ops
+
+    y_plain, plain_s, _ = run_once(wrap=False)
+    y_wrapped, wrapped_s, ops = run_once(wrap=True)
+    assert np.array_equal(y_plain, y_wrapped), \
+        "an empty fault schedule changed the protocol output"
+
+    ft = FaultyTransport(InProcPipe.make_pair()[0])
+    n = 100_000
+    t0 = time.perf_counter_ns()
+    for _ in range(n):
+        ft._next_fault()  # the whole no-fault hot path: counter + miss
+    null_op_ns = (time.perf_counter_ns() - t0) / n
+
+    off_pct = 100.0 * ops * null_op_ns * 1e-9 / max(plain_s, 1e-9)
+    return {
+        "smoke_plain_s": round(plain_s, 4),
+        "smoke_wrapped_s": round(wrapped_s, 4),
+        "wrapped_overhead_pct": round(
+            100.0 * (wrapped_s - plain_s) / max(plain_s, 1e-9), 2),
+        "transport_ops": ops,
+        "null_op_ns": round(null_op_ns, 1),
+        "faults_off_overhead_pct": round(off_pct, 4),
+    }
+
+
 def _smoke_oracle():
     """Byte/round counts of the smoke config at both wire versions —
     the deterministic reference ``check()`` ratchets against."""
@@ -421,6 +483,7 @@ def full():
     result = {"bench": "net", **run(FULL, write=lambda m: print(m, flush=True))}
     result["smoke_oracle"] = _smoke_oracle()
     result["tracer_overhead"] = _tracer_overhead()
+    result["resilience_overhead"] = _resilience_overhead()
     out = Path(__file__).resolve().parents[1] / "BENCH_net.json"
     out.write_text(json.dumps(result, indent=2) + "\n")
     print(f"# wrote {out}", flush=True)
@@ -458,19 +521,29 @@ def check() -> None:
                 f"net ratchet: {ver} {key} grew {w} → {g}"
     assert got["v2"]["offline_bytes"] < got["v1"]["offline_bytes"], \
         "net ratchet: v2 no longer compresses the offline phase"
-    assert "tracer_overhead" in json.loads(path.read_text()), \
+    committed = json.loads(path.read_text())
+    assert "tracer_overhead" in committed, \
         f"{path} has no tracer_overhead section — rerun the full bench"
+    assert "resilience_overhead" in committed, \
+        f"{path} has no resilience_overhead section — rerun the full bench"
     ov = _tracer_overhead()
     assert ov["tracing_off_overhead_pct"] < 1.0, \
         (f"obs instrumentation costs "
          f"{ov['tracing_off_overhead_pct']:.3f}% of the smoke point with "
          f"tracing OFF ({ov['trace_events']} call sites x "
          f"{ov['null_span_ns']:.0f}ns null span) — must stay <1%")
+    rov = _resilience_overhead()
+    assert rov["faults_off_overhead_pct"] < 2.0, \
+        (f"fault-injection wrapper costs "
+         f"{rov['faults_off_overhead_pct']:.3f}% of the smoke point with "
+         f"faults DISABLED ({rov['transport_ops']} transport ops x "
+         f"{rov['null_op_ns']:.0f}ns null op) — must stay <2%")
     print(f"net check OK: smoke oracle v1 "
           f"{got['v1']['offline_bytes']}B / v2 "
           f"{got['v2']['offline_bytes']}B offline within ratchet; "
           f"tracing-off overhead {ov['tracing_off_overhead_pct']:.4f}% "
-          f"(<1%)", flush=True)
+          f"(<1%); faults-off overhead "
+          f"{rov['faults_off_overhead_pct']:.4f}% (<2%)", flush=True)
 
 
 def main() -> None:

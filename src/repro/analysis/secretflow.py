@@ -93,6 +93,8 @@ DEFAULT_PATHS = (
     "src/repro/core/session.py",
     "src/repro/net/party.py",
     "src/repro/net/wire.py",
+    "src/repro/net/faults.py",
+    "src/repro/net/resilience.py",
     "src/repro/serve/__init__.py",
     "src/repro/serve/errors.py",
     "src/repro/serve/gateway.py",

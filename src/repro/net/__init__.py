@@ -8,20 +8,30 @@ transport:
                     streams, HE ciphertexts, Beaver shares, OT batches)
   ``net.transport`` Transport ABC + InProcPipe (threaded queues) +
                     TcpTransport (length-prefixed framing, loopback or
-                    real sockets, optional LAN-model shaping)
+                    real sockets, optional LAN-model shaping) +
+                    per-phase Deadlines and the
+                    TransportTimeout/TransportClosed split
   ``net.party``     GarblerEndpoint / EvaluatorEndpoint: walk the compiled
                     ``core/plan.py`` op-graph and execute each op's
                     offline/online halves as actual message exchanges,
                     asserting byte totals against the metered Channel
                     (the in-process simulation is the oracle)
+  ``net.faults``    FaultyTransport: seeded, deterministic fault
+                    injection (reset/stall/torn/dup) over any transport
+  ``net.resilience`` ResilientClient: reconnect with backoff + jitter,
+                    session resume via the client token, burn-on-
+                    interrupt bundle semantics
 """
 
 from repro.net.transport import (
     AcceptLoop,
+    Deadlines,
     InProcPipe,
     TcpListener,
     TcpTransport,
     Transport,
+    TransportClosed,
+    TransportTimeout,
 )
 from repro.net.wire import WIRE_VERSION, Msg, Seg, decode_frame, encode_msg
 from repro.net.party import (
@@ -29,13 +39,19 @@ from repro.net.party import (
     GarblerEndpoint,
     NetProtocolError,
     PitNetServer,
+    SessionRebindError,
     SessionState,
     WireLedger,
 )
+from repro.net.faults import Fault, FaultPlan, FaultSchedule, FaultyTransport
+from repro.net.resilience import ResilientClient, RetryPolicy, SessionLost
 
 __all__ = [
     "Transport", "InProcPipe", "TcpTransport", "TcpListener", "AcceptLoop",
+    "TransportClosed", "TransportTimeout", "Deadlines",
     "WIRE_VERSION", "Msg", "Seg", "encode_msg", "decode_frame",
     "GarblerEndpoint", "EvaluatorEndpoint", "PitNetServer",
-    "SessionState", "WireLedger", "NetProtocolError",
+    "SessionState", "WireLedger", "NetProtocolError", "SessionRebindError",
+    "Fault", "FaultSchedule", "FaultyTransport", "FaultPlan",
+    "ResilientClient", "RetryPolicy", "SessionLost",
 ]

@@ -42,6 +42,7 @@ import time
 import traceback
 import uuid
 from collections import deque
+from contextlib import contextmanager
 from dataclasses import asdict, dataclass, field
 from typing import Deque, Dict, List, Optional, Sequence, Tuple
 
@@ -74,12 +75,25 @@ from repro.core.protocol import (
 )
 from repro.core.session import GarblingCache, gc_net_for
 from repro.net import wire as W
-from repro.net.transport import Transport, TransportClosed
+from repro.net.transport import (
+    Deadlines,
+    Transport,
+    TransportClosed,
+    TransportTimeout,
+)
 from repro.serve.errors import BundlePoolEmpty
 
 
 class NetProtocolError(RuntimeError):
     """Lockstep violation, peer error, or malformed exchange."""
+
+
+class SessionRebindError(NetProtocolError):
+    """A reconnecting endpoint pair landed in a different session than
+    the one its client state remembers — the server reclaimed the old
+    session (lease expired, or it was never parked) and minted a new
+    one. The client's pooled bundles belong to the dead session and are
+    unusable; a resilient caller surfaces this as ``SessionLost``."""
 
 
 _bundle_ids = itertools.count(1)
@@ -329,9 +343,15 @@ def _trace_segs(phase: int, segs: Sequence[W.Seg], direction: str) -> None:
 
 class _Endpoint:
     def __init__(self, transport: Transport, *, timeout: Optional[float],
-                 ledger: WireLedger):
+                 ledger: WireLedger,
+                 deadlines: Optional[Deadlines] = None):
         self.transport = transport
         self.timeout = timeout
+        # per-phase recv deadlines; a bare ``timeout`` becomes the
+        # uniform default for callers that predate Deadlines
+        self.deadlines = deadlines if deadlines is not None \
+            else Deadlines.uniform(timeout)
+        self._phase_name = "idle"
         self.ledger = ledger
         self._seg_queue: Deque[Tuple[int, W.Seg]] = deque()
         # negotiated at hello; v1 until then (pre-hello traffic is v1)
@@ -394,11 +414,20 @@ class _Endpoint:
                 self._emit_proto([s for _, s in buf[i:j]], phase)
                 i = j
 
+    @contextmanager
+    def _in_phase(self, phase: str):
+        prev, self._phase_name = self._phase_name, phase
+        try:
+            yield
+        finally:
+            self._phase_name = prev
+
     # -- recv ----------------------------------------------------------
     def _recv_frame(self) -> W.Msg:
         self._flush()
         with obs.span("wire.recv") as sp:
-            frame = self.transport.recv(timeout=self.timeout)
+            frame = self.transport.recv(
+                timeout=self.deadlines.for_phase(self._phase_name))
             msg = W.decode_frame(frame)
         sp.set(bytes=len(frame), kind=msg.kind)
         self.ledger.record_io(False, len(frame))
@@ -479,17 +508,30 @@ class SessionState:
         self.wire_version = W.WIRE_VERSION  # negotiated at hello
         self.iknp = None  # per-session IKNP receiver state (v2, lazy)
         self.created_s = time.perf_counter()
+        # resilience: lease/epoch so a reconnecting client can rebind
+        # its transports to THIS session instead of getting a new one.
+        # epoch counts transport generations; lease_expires_s is set
+        # (monotonic clock) while the session is parked with zero live
+        # endpoints awaiting a resume, None otherwise.
+        self.epoch = 0
+        self.resumes = 0
+        self.gen = 0  # highest client transport generation seen in a
+        # hello — lets a gateway detect a reconnect deterministically
+        # even when the new hellos race the old endpoints' teardown
+        self.lease_expires_s: Optional[float] = None
         # accounting (mutated under ``lock``)
         self.prep_requests = 0
         self.run_requests = 0
+        self.run_inflight = 0  # runs started, neither consumed nor burned
         self.bundles_prepped = 0
         self.bundles_consumed = 0
         self.bundles_returned = 0
+        self.bundles_burned = 0
         self.sheds = 0
 
     def outstanding(self) -> int:
         with self.lock:
-            return len(self.bundles)
+            return len(self.bundles) + self.run_inflight
 
     def summary(self) -> Dict[str, object]:
         """Per-session rate/byte accounting on top of the wire ledger."""
@@ -505,7 +547,10 @@ class SessionState:
                 "bundles_prepped": self.bundles_prepped,
                 "bundles_consumed": self.bundles_consumed,
                 "bundles_returned": self.bundles_returned,
-                "bundles_outstanding": len(self.bundles),
+                "bundles_burned": self.bundles_burned,
+                "bundles_outstanding": len(self.bundles) + self.run_inflight,
+                "epoch": self.epoch,
+                "resumes": self.resumes,
                 "sheds": self.sheds,
                 "elapsed_s": round(dt, 3),
                 "runs_per_s": round(self.run_requests / dt, 3),
@@ -624,15 +669,21 @@ class EvaluatorEndpoint(_Endpoint):
                  seq_len: Optional[int] = None,
                  shared: Optional[ServerShared] = None, impl: str = "ref",
                  timeout: Optional[float] = None,
+                 deadlines: Optional[Deadlines] = None,
                  session: Optional[SessionState] = None):
         if shared is None:
             if model is None or seq_len is None:
                 raise ValueError("need model+seq_len or a ServerShared")
             shared = ServerShared(model, seq_len, impl=impl)
         session = session or shared.session
-        super().__init__(transport, timeout=timeout, ledger=session.ledger)
+        super().__init__(transport, timeout=timeout, ledger=session.ledger,
+                         deadlines=deadlines)
         self.shared = shared
         self.session = session
+        #: why the serve loop ended: "bye" | "closed" | "timeout" |
+        #: "error" | None while still serving. Session owners (the
+        #: gateway) use it to tell a clean goodbye from a vanished peer.
+        self.disconnect_reason: Optional[str] = None
 
     # ------------------------------------------------------------------
     def serve_forever(self) -> None:
@@ -656,54 +707,106 @@ class EvaluatorEndpoint(_Endpoint):
     def _serve_loop(self) -> None:
         while True:
             try:
-                msg = self._recv_frame()
+                msg = self._recv_frame()  # idle phase: between requests
+            except TransportTimeout:
+                # the peer is slow/absent but the connection is intact:
+                # an idle deadline expiring is this server's decision to
+                # hang up, not a peer crash — tell the peer why (class
+                # name only), then release the transport
+                self.disconnect_reason = "timeout"
+                try:
+                    self._send_control("error", "TransportTimeout "
+                                                "(idle deadline exceeded)")
+                except (TransportClosed, OSError):
+                    pass
+                self._close_quietly()
+                return
             except TransportClosed:
+                self.disconnect_reason = "closed"
                 return
             try:
                 if msg.kind != W.KIND_CONTROL:
                     raise NetProtocolError(
                         f"expected a CONTROL frame, got kind={msg.kind}")
                 if msg.tag == "bye":
+                    self.disconnect_reason = "bye"
                     return
                 if msg.tag == "hello":
-                    self._handle_hello(msg.payload)
+                    with self._in_phase("hello"):
+                        self._handle_hello(msg.payload)
                 elif msg.tag == "prep":
                     with obs.span("offline", role="evaluator",
-                                  sid=self.session.sid):
+                                  sid=self.session.sid), \
+                            self._in_phase("offline"):
                         self._handle_prep(msg.payload)
                 elif msg.tag == "run":
                     with obs.span("online", role="evaluator",
-                                  sid=self.session.sid):
+                                  sid=self.session.sid), \
+                            self._in_phase("online"):
                         self._handle_run(msg.payload)
                 else:
                     raise NetProtocolError(f"unknown request {msg.tag!r}")
+            except TransportTimeout:
+                # mid-request deadline: the stream may be desynced
+                # (lockstep position unknown) — signal and hang up; any
+                # interrupted run was already burned by _handle_run
+                self.disconnect_reason = "timeout"
+                try:
+                    self._send_control("error", "TransportTimeout "
+                                                "(request deadline exceeded)")
+                except (TransportClosed, OSError):
+                    pass
+                self._close_quietly()
+                return
             except TransportClosed:
+                self.disconnect_reason = "closed"
                 return
             except Exception as e:  # report, then die loudly
                 # full traceback stays on THIS side only: exception reprs
                 # interpolate live values (shapes, array contents, key
                 # material in the worst case), so the peer gets just the
                 # class name — enough to correlate with the server log
+                self.disconnect_reason = "error"
                 traceback.print_exc(file=sys.stderr)
                 try:
                     self._send_control(
                         "error", f"{type(e).__name__} "
                                  f"(see evaluator-side log)")
-                    # drain the peer's in-flight stream: closing a TCP
-                    # socket with unread data RSTs the connection, which
-                    # would discard the queued error frame before the
-                    # peer reads it; the peer stops sending (and closes)
-                    # once the error frame reaches it, bounding the loop
-                    while True:
-                        self.transport.recv(timeout=0.5)
-                except (TransportClosed, OSError):
-                    pass
+                    self._drain_peer()
+                except TransportClosed:
+                    pass  # peer already gone — nothing left to tell it
                 # close so a peer blocked mid-send fails fast
-                try:
-                    self.transport.close()
-                except OSError:
-                    pass
+                self._close_quietly()
                 raise
+
+    def _drain_peer(self) -> None:
+        """Drain the peer's in-flight stream after sending an error:
+        closing a TCP socket with unread data RSTs the connection, which
+        would discard the queued error frame before the peer reads it.
+        Each wait respects the configured idle deadline (the old code
+        hardcoded 0.5 s, silently overriding long-timeout deployments);
+        a timeout or close ends the drain, and an OSError is surfaced as
+        a typed close instead of being swallowed indistinguishably."""
+        budget = self.deadlines.for_phase("idle")
+        if budget is None or budget > 5.0:
+            budget = 5.0  # a drain must stay bounded even when the
+            # serve deadline is "block forever"
+        while True:
+            try:
+                self.transport.recv(timeout=budget)
+            except TransportTimeout:
+                return  # peer went quiet without closing: good enough
+            except OSError as e:
+                if isinstance(e, TransportClosed):
+                    raise
+                raise TransportClosed(
+                    f"drain failed: {type(e).__name__}") from e
+
+    def _close_quietly(self) -> None:
+        try:
+            self.transport.close()
+        except OSError:
+            pass
 
     # ------------------------------------------------------------------
     def _handle_hello(self, payload) -> None:
@@ -723,6 +826,13 @@ class EvaluatorEndpoint(_Endpoint):
         self.compression = comp
         with self.session.lock:  # readers (stats pollers) snapshot it
             self.session.wire_version = ver
+            if payload.get("reset_ot"):
+                # reconnect hello: the IKNP extension counters on a
+                # half-dead transport pair are desynced (receiver and
+                # sender advance at different message boundaries), so a
+                # resuming client asks both sides to redo the base OT —
+                # ~32 KiB, vs silently corrupted labels otherwise
+                self.session.iknp = None
         self._send_control("hello-ok", {
             **self.shared.hello_payload(),
             **extra,
@@ -890,21 +1000,39 @@ class EvaluatorEndpoint(_Endpoint):
     # online: one run against one bundle
     # ------------------------------------------------------------------
     def _handle_run(self, payload) -> None:
-        sh = self.shared
         sess = self.session
-        p = sh.protocol
-        plan = sh.plan
-        t = p.t
         bid = int(payload["id"])
         with sess.lock:
             sparts = sess.bundles.pop(bid, None)
             if sparts is not None:
                 sess.run_requests += 1
-                sess.bundles_consumed += 1
+                sess.run_inflight += 1
         if sparts is None:
             raise NetProtocolError(
                 f"bundle {bid} unknown or already consumed on the server")
+        try:
+            self._run_bundle(sparts, payload)
+        except BaseException:
+            # burn on interrupt: the online leg exchanged SOME of this
+            # bundle's labels before dying — re-running it would hand
+            # the peer a second active label per wire, breaking GC
+            # security. The bundle is gone from the store (popped above)
+            # and is accounted as burned, never returned to any pool.
+            with sess.lock:
+                sess.run_inflight -= 1
+                sess.bundles_burned += 1
+            obs.instant("net.bundle_burn", sid=sess.sid, bundle=bid)
+            raise
+        with sess.lock:
+            sess.run_inflight -= 1
+            sess.bundles_consumed += 1
 
+    def _run_bundle(self, sparts: Dict[str, dict], payload) -> None:
+        sh = self.shared
+        p = sh.protocol
+        plan = sh.plan
+        t = p.t
+        bid = int(payload["id"])
         S, d = plan.seq_len, plan.d
         regs: Dict[str, np.ndarray] = {
             "x": W.unpack_u64(self._expect_seg("input-share"), (S, d))
@@ -1107,10 +1235,12 @@ class ClientShared:
                     raise NetProtocolError(
                         "offline/online endpoints saw different plans")
                 if sid != self.session_id:
-                    raise NetProtocolError(
-                        f"offline/online endpoints landed in different "
-                        f"sessions ({self.session_id} vs {sid}) — did the "
-                        f"hellos carry the same client token?")
+                    raise SessionRebindError(
+                        f"endpoint landed in session {sid}, not the "
+                        f"client's session {self.session_id} — either the "
+                        f"hellos carried different tokens, or the server "
+                        f"reclaimed the session (lease expired) and "
+                        f"minted a new one")
                 if ver != self.negotiated_version \
                         or comp != self.negotiated_compression:
                     raise NetProtocolError(
@@ -1144,25 +1274,42 @@ class GarblerEndpoint(_Endpoint):
     def __init__(self, transport: Transport, *,
                  shared: Optional[ClientShared] = None, seed: int = 0,
                  impl: str = "ref", timeout: Optional[float] = None,
-                 wire_version: int = W.WIRE_V2, compression: bool = True):
+                 deadlines: Optional[Deadlines] = None,
+                 wire_version: int = W.WIRE_V2, compression: bool = True,
+                 reset_ot: bool = False, gen: int = 0):
         shared = shared or ClientShared(seed=seed, impl=impl,
                                         wire_version=wire_version,
                                         compression=compression)
-        super().__init__(transport, timeout=timeout, ledger=shared.ledger)
+        super().__init__(transport, timeout=timeout, ledger=shared.ledger,
+                         deadlines=deadlines)
         self.shared = shared
+        #: reconnect endpoints set this so the hello asks the server to
+        #: drop the session's IKNP state (see EvaluatorEndpoint hello)
+        self.reset_ot = reset_ot
+        #: client transport generation (0 = first pair, bumped by the
+        #: resilient client on every reconnect) — rides in the hello so
+        #: the server's resume accounting is timing-independent
+        self.gen = gen
         self._lock = threading.Lock()  # one request at a time per endpoint
 
     # ------------------------------------------------------------------
     def handshake(self) -> Plan:
         """Hello exchange; raises :class:`BundlePoolEmpty` if a gateway
         at its session cap sheds the connection (typed CONTROL frame
-        with a retry-after hint, not an error string)."""
-        with self._lock:
-            self._send_control("hello", {
+        with a retry-after hint, not an error string), and
+        :class:`SessionRebindError` if a reconnect hello lands in a
+        different session than the client remembers."""
+        with self._lock, self._in_phase("hello"):
+            hello = {
                 "version": self.shared.wire_version,
                 "compression": self.shared.compression,
                 "client": self.shared.client_token,
-            })
+            }
+            if self.reset_ot:
+                hello["reset_ot"] = True
+            if self.gen:
+                hello["gen"] = self.gen
+            self._send_control("hello", hello)
             self.shared.adopt_hello(self._expect_msg(W.KIND_CONTROL,
                                                      "hello-ok"))
             self.wire_version = self.shared.negotiated_version
@@ -1188,7 +1335,8 @@ class GarblerEndpoint(_Endpoint):
         sh = self.shared
         if sh.plan is None:
             self.handshake()
-        with self._lock, obs.span("offline", role="garbler", bundles=n):
+        with self._lock, obs.span("offline", role="garbler", bundles=n), \
+                self._in_phase("offline"):
             return self._preprocess_locked(n)
 
     def _preprocess_locked(self, n: int) -> List[int]:
@@ -1347,7 +1495,8 @@ class GarblerEndpoint(_Endpoint):
             if parts is None:
                 raise NetProtocolError(
                     f"bundle {bundle_id} unknown or already consumed")
-            with obs.span("online", role="garbler", bundle_id=bundle_id):
+            with obs.span("online", role="garbler", bundle_id=bundle_id), \
+                    self._in_phase("online"):
                 return self._run_locked(x, bundle_id, parts)
 
     def _run_locked(self, x, bundle_id: int, parts) -> np.ndarray:
@@ -1503,10 +1652,11 @@ class PitNetServer:
         self.threads: List[threading.Thread] = []
 
     def serve_transport(self, transport: Transport, *,
-                        timeout: Optional[float] = None, name: str = ""
+                        timeout: Optional[float] = None,
+                        deadlines: Optional[Deadlines] = None, name: str = ""
                         ) -> threading.Thread:
         ep = EvaluatorEndpoint(transport, shared=self.shared,
-                               timeout=timeout)
+                               timeout=timeout, deadlines=deadlines)
         self.endpoints.append(ep)
         th = threading.Thread(target=ep.serve_forever, daemon=True,
                               name=name or f"pit-eval-{len(self.threads)}")
@@ -1515,7 +1665,8 @@ class PitNetServer:
         return th
 
     def serve_tcp(self, listener, *, accept_timeout: float = 1.0,
-                  timeout: Optional[float] = None, name: str = "",
+                  timeout: Optional[float] = None,
+                  deadlines: Optional[Deadlines] = None, name: str = "",
                   max_conns: Optional[int] = None):
         """Serve every connection accepted on ``listener`` in the
         background (each becomes an evaluator endpoint over the shared
@@ -1528,7 +1679,8 @@ class PitNetServer:
         ``accept_timeout`` is the stop-flag poll interval.
         """
         def handler(transport):
-            self.serve_transport(transport, timeout=timeout, name=name)
+            self.serve_transport(transport, timeout=timeout,
+                                 deadlines=deadlines, name=name)
 
         return listener.accept_loop(
             handler, accept_timeout=accept_timeout, max_accepts=max_conns,

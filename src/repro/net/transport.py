@@ -25,6 +25,7 @@ from protocol payload.
 
 from __future__ import annotations
 
+import dataclasses
 import queue
 import socket
 import struct
@@ -34,7 +35,48 @@ from typing import Callable, Optional, Tuple
 
 
 class TransportClosed(ConnectionError):
-    """The peer closed the connection (or the recv timed out)."""
+    """The peer closed the connection (or the stream is unrecoverable)."""
+
+
+class TransportTimeout(TransportClosed):
+    """A recv/accept deadline expired with the connection still open.
+
+    Subclasses :class:`TransportClosed` so every existing ``except
+    TransportClosed`` teardown path still fires, but callers that care
+    (the resilient client, the evaluator serve loop) can distinguish "the
+    peer is slow" from "the peer is gone": a timeout at a frame boundary
+    leaves the stream intact and the operation retryable, a close does
+    not.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class Deadlines:
+    """Per-phase recv deadlines for an endpoint (seconds, None = block).
+
+    The two-party walk has phases with wildly different latency
+    envelopes: a ``hello`` answers in one round trip, an ``offline`` prep
+    streams garbled slabs for seconds, an ``online`` op is
+    sub-second, and an ``idle`` serve loop may legitimately sit for a
+    long time between client requests. One uniform timeout either kills
+    idle sessions or lets a stalled prep hang for the idle budget —
+    per-phase deadlines bound each wait by what that phase can honestly
+    need. Unset phases fall back to ``default_s``.
+    """
+
+    hello_s: Optional[float] = None
+    offline_s: Optional[float] = None
+    online_s: Optional[float] = None
+    idle_s: Optional[float] = None
+    default_s: Optional[float] = None
+
+    @classmethod
+    def uniform(cls, timeout_s: Optional[float]) -> "Deadlines":
+        return cls(default_s=timeout_s)
+
+    def for_phase(self, phase: str) -> Optional[float]:
+        t = getattr(self, f"{phase}_s", None)
+        return self.default_s if t is None else t
 
 
 class Transport:
@@ -110,12 +152,13 @@ class InProcPipe(Transport):
     def recv(self, timeout: Optional[float] = None) -> bytes:
         if self.recv_gate is not None:
             if not self.recv_gate.wait(timeout=timeout):
-                raise TransportClosed(
+                raise TransportTimeout(
                     f"recv gate not released within {timeout}s")
         try:
             frame = self._recv_q.get(timeout=timeout)
         except queue.Empty:
-            raise TransportClosed(f"recv timed out after {timeout}s")
+            raise TransportTimeout(
+                f"recv timed out after {timeout}s") from None
         if frame is _CLOSE:
             raise TransportClosed("peer closed the pipe")
         self.bytes_recv += len(frame)
@@ -165,13 +208,18 @@ class TcpTransport(Transport):
         self.bytes_sent += len(frame)
         self.frames_sent += 1
 
-    def _recv_exact(self, n: int) -> bytes:
+    def _recv_exact(self, n: int, *, mid_frame: bool = False) -> bytes:
         chunks = []
         while n:
             try:
                 chunk = self._sock.recv(min(n, 1 << 20))
             except socket.timeout:
-                raise TransportClosed("recv timed out")
+                if chunks or mid_frame:
+                    # partial frame consumed: the byte stream has lost
+                    # its framing — no retry can resynchronize it
+                    raise TransportClosed(
+                        "recv timed out mid-frame: framing lost") from None
+                raise TransportTimeout("recv timed out") from None
             except OSError as e:
                 raise TransportClosed(f"recv failed: {e}") from e
             if not chunk:
@@ -190,7 +238,7 @@ class TcpTransport(Transport):
             raise TransportClosed(f"recv failed: {e}") from e
         try:
             (n,) = _LEN.unpack(self._recv_exact(_LEN.size))
-            frame = self._recv_exact(n)
+            frame = self._recv_exact(n, mid_frame=True)
         finally:
             try:
                 self._sock.settimeout(None)
@@ -274,7 +322,8 @@ class TcpListener:
             try:
                 sock, _ = self._sock.accept()
             except socket.timeout:
-                raise TransportClosed(f"accept timed out after {timeout}s")
+                raise TransportTimeout(
+                    f"accept timed out after {timeout}s") from None
             finally:
                 self._sock.settimeout(None)
         sock.settimeout(None)

@@ -33,6 +33,21 @@ Admission control (the serving-plane contract):
   bye or a mid-exchange kill), its in-flight bundles are counted as
   returned and reclaimed, and the session slot frees for the next
   client. Other sessions never notice.
+
+Resilience (the fault-tolerance contract, PR 10):
+
+* **lease/resume** — with ``lease_s > 0``, a session whose last
+  transport drops *without* a clean bye is **parked** for the lease
+  window instead of reclaimed: its bundle store, ledger, and sid
+  survive, and a re-hello carrying the same client token rebinds fresh
+  transports to it (``epoch`` increments, the hello's ``reset_ot``
+  redoes the base OT). A clean bye still reclaims immediately. Expired
+  leases are garbage-collected on the next admission or stats poll and
+  their bundles counted as returned.
+* **burn-on-interrupt** — a run that dies mid-op burns its bundle
+  (``bundles_burned``): partial label disclosure makes re-running it
+  unsafe. The metrics identity under every fault is
+  ``prepped == consumed + outstanding + returned + burned``.
 """
 
 from __future__ import annotations
@@ -47,8 +62,8 @@ from repro.net.party import (
     ServerShared,
     SessionState,
 )
-from repro.net.transport import AcceptLoop, TcpListener, Transport, \
-    TransportClosed
+from repro.net.transport import AcceptLoop, Deadlines, TcpListener, \
+    Transport, TransportClosed
 
 
 class _SessionShed(TransportClosed):
@@ -63,8 +78,10 @@ class _GatewayEndpoint(EvaluatorEndpoint):
     session the hello's client token resolves to."""
 
     def __init__(self, transport: Transport, gateway: "PitGateway", *,
-                 timeout: Optional[float] = None):
+                 timeout: Optional[float] = None,
+                 deadlines: Optional["Deadlines"] = None):
         super().__init__(transport, shared=gateway.shared, timeout=timeout,
+                         deadlines=deadlines,
                          session=SessionState(sid=-1, client="pre-hello"))
         self.gateway = gateway
         self._bound = False
@@ -72,7 +89,8 @@ class _GatewayEndpoint(EvaluatorEndpoint):
     # -- session resolution -------------------------------------------
     def _on_hello(self, payload) -> dict:
         token = payload.get("client")
-        sess, hint = self.gateway._admit_session(token)
+        gen = int(payload.get("gen", 0) or 0)
+        sess, hint = self.gateway._admit_session(token, gen=gen)
         if sess is None:
             self._send_control("shed", {"retry_after_s": hint,
                                         "scope": "session"})
@@ -83,7 +101,7 @@ class _GatewayEndpoint(EvaluatorEndpoint):
         self.session = sess
         self.ledger = sess.ledger
         self._bound = True
-        return {"session": sess.sid}
+        return {"session": sess.sid, "epoch": sess.epoch}
 
     def _admit_prep(self, n: int) -> Optional[float]:
         return self.gateway._admit_prep(self.session, n)
@@ -105,7 +123,8 @@ class _GatewayEndpoint(EvaluatorEndpoint):
 
     def _on_disconnect(self) -> None:
         if self._bound:
-            self.gateway._release_endpoint(self.session)
+            self.gateway._release_endpoint(
+                self.session, reason=self.disconnect_reason or "closed")
 
 
 class PitGateway:
@@ -121,6 +140,7 @@ class PitGateway:
     def __init__(self, model, seq_len: int, *, impl: str = "ref",
                  seed: int = 104729, max_sessions: int = 8,
                  pool_cap: int = 4, retry_floor_s: float = 0.05,
+                 lease_s: float = 0.0,
                  shared: Optional[ServerShared] = None,
                  wire_version: Optional[int] = None,
                  compression: Optional[bool] = None):
@@ -136,12 +156,19 @@ class PitGateway:
         self.max_sessions = max_sessions
         self.pool_cap = pool_cap
         self.retry_floor_s = retry_floor_s
+        #: resume window: a session whose last transport dropped without
+        #: a clean bye keeps its state for this long, waiting for a
+        #: re-hello with the same token. 0 = legacy behavior (reclaim
+        #: immediately — a dropped client's bundles return at once).
+        self.lease_s = lease_s
         self._lock = threading.Lock()
         self._sessions: Dict[str, SessionState] = {}  # token -> live
         self._closed: List[Dict[str, object]] = []  # summaries, torn down
         self._next_sid = 1
         self.sessions_admitted = 0
         self.sessions_shed = 0
+        self.sessions_resumed = 0
+        self.leases_expired = 0
         self.bundles_returned = 0
         # refill-queue instrumentation for retry-after hints
         self._prep_inflight = 0  # bundles in flight across all sessions
@@ -154,14 +181,34 @@ class PitGateway:
     # ------------------------------------------------------------------
     # admission control
     # ------------------------------------------------------------------
-    def _admit_session(self, token: Optional[str]
+    def _admit_session(self, token: Optional[str], *, gen: int = 0
                        ) -> Tuple[Optional[SessionState], Optional[float]]:
         """Resolve a hello's client token to a session, minting one if
         needed. Returns ``(session, None)`` on admit, ``(None, hint)``
         when the session cap sheds the connection."""
         with self._lock:
+            self._gc_leases_locked()
             if token and token in self._sessions:
-                sess = self._sessions[token]  # second endpoint of a pair
+                # second endpoint of a pair, or a resume. A resume is a
+                # re-hello on a parked session (zero live endpoints) OR
+                # one carrying a new client transport generation — the
+                # ``gen`` check is what makes resume accounting
+                # deterministic when the fresh hellos race the dead
+                # pair's teardown. Either way the session state
+                # survives: new epoch, IKNP dropped (the dead pair's
+                # extension counters are untrustworthy; the reset costs
+                # one base OT).
+                sess = self._sessions[token]
+                if sess.endpoints == 0 or gen > sess.gen:
+                    with sess.lock:
+                        sess.epoch += 1
+                        sess.resumes += 1
+                        sess.gen = max(sess.gen, gen)
+                        sess.lease_expires_s = None
+                        sess.iknp = None
+                    self.sessions_resumed += 1
+                    obs.instant("gateway.session_resume", sid=sess.sid,
+                                epoch=sess.epoch)
                 sess.endpoints += 1
                 return sess, None
             if len(self._sessions) >= self.max_sessions:
@@ -214,11 +261,13 @@ class PitGateway:
     # serving
     # ------------------------------------------------------------------
     def serve_transport(self, transport: Transport, *,
-                        timeout: Optional[float] = None
+                        timeout: Optional[float] = None,
+                        deadlines: Optional[Deadlines] = None
                         ) -> threading.Thread:
         """Serve one accepted transport on its own thread (session
         resolution happens at its hello)."""
-        ep = _GatewayEndpoint(transport, self, timeout=timeout)
+        ep = _GatewayEndpoint(transport, self, timeout=timeout,
+                              deadlines=deadlines)
         self.endpoints.append(ep)
         th = threading.Thread(target=self._serve_one, args=(ep,),
                               daemon=True,
@@ -243,12 +292,14 @@ class PitGateway:
 
     def serve_listener(self, listener: TcpListener, *,
                        accept_timeout: float = 1.0,
-                       timeout: Optional[float] = None, **shaping
+                       timeout: Optional[float] = None,
+                       deadlines: Optional[Deadlines] = None, **shaping
                        ) -> AcceptLoop:
         """The front door: ONE accept loop on ``listener``; every
         accepted connection becomes a gateway endpoint."""
         loop = listener.accept_loop(
-            lambda t: self.serve_transport(t, timeout=timeout),
+            lambda t: self.serve_transport(t, timeout=timeout,
+                                           deadlines=deadlines),
             accept_timeout=accept_timeout, name="pit-gateway-accept",
             **shaping)
         self._loops.append(loop)
@@ -257,21 +308,55 @@ class PitGateway:
     # ------------------------------------------------------------------
     # teardown & introspection
     # ------------------------------------------------------------------
-    def _release_endpoint(self, sess: SessionState) -> None:
+    def _release_endpoint(self, sess: SessionState, *,
+                          reason: str = "closed") -> None:
         """An endpoint bound to ``sess`` disconnected. When the last one
-        drops, reclaim the session: in-flight bundles are returned (the
-        client is gone; its ids can never be run) and the slot frees."""
+        drops: a clean ``bye`` (or a lease-less gateway) reclaims the
+        session — outstanding bundles are returned (the client is gone;
+        its ids can never be run) and the slot frees. With ``lease_s``
+        set, an *unclean* drop (kill, timeout, error) parks the session
+        instead: the state survives for the lease window so a
+        reconnecting client can resume it."""
         with self._lock:
             sess.endpoints -= 1
             if sess.endpoints > 0:
                 return
-            with sess.lock:
-                returned = len(sess.bundles)
-                sess.bundles.clear()
-                sess.bundles_returned += returned
-            self.bundles_returned += returned
-            self._sessions.pop(sess.client, None)
-            self._closed.append(sess.summary())
+            if self.lease_s > 0 and reason != "bye":
+                with sess.lock:
+                    sess.lease_expires_s = time.monotonic() + self.lease_s
+                obs.instant("gateway.session_park", sid=sess.sid,
+                            reason=reason, lease_s=self.lease_s)
+                return
+            self._reclaim_locked(sess)
+
+    def _reclaim_locked(self, sess: SessionState) -> None:
+        """Tear a session down for good (caller holds the gateway lock):
+        unconsumed bundles are returned, the summary is archived, and
+        the token slot frees. Burned bundles stay burned — they were
+        never reusable."""
+        with sess.lock:
+            returned = len(sess.bundles)
+            sess.bundles.clear()
+            sess.bundles_returned += returned
+            sess.lease_expires_s = None
+        self.bundles_returned += returned
+        self._sessions.pop(sess.client, None)
+        self._closed.append(sess.summary())
+
+    def _gc_leases_locked(self) -> None:
+        """Reclaim parked sessions whose lease expired (caller holds the
+        gateway lock). Runs on every admission and stats poll, so an
+        expired lease is observed without waiting for wire traffic."""
+        if self.lease_s <= 0:
+            return
+        now = time.monotonic()
+        expired = [s for s in self._sessions.values()
+                   if s.endpoints == 0 and s.lease_expires_s is not None
+                   and s.lease_expires_s <= now]
+        for sess in expired:
+            self.leases_expired += 1
+            obs.instant("gateway.lease_expire", sid=sess.sid)
+            self._reclaim_locked(sess)
 
     def stats(self) -> Dict[str, object]:
         """Gateway-wide accounting: admission counters, the shared
@@ -286,24 +371,34 @@ class PitGateway:
         ledger mutex inside it.
         """
         with self._lock:
+            self._gc_leases_locked()
+            active = sum(1 for s in self._sessions.values()
+                         if s.endpoints > 0)
+            parked = len(self._sessions) - active
             live = [s.summary() for s in self._sessions.values()]
             closed = list(self._closed)
             inflight = self._prep_inflight
             ewma = self._prep_ewma_s
             admitted = self.sessions_admitted
             sess_shed = self.sessions_shed
+            resumed = self.sessions_resumed
+            expired = self.leases_expired
             returned = self.bundles_returned
         sessions = closed + live
         dt = max(time.perf_counter() - self._started_s, 1e-9)
         consumed = sum(s["bundles_consumed"] for s in sessions)
         return {
-            "sessions_active": len(live),
+            "sessions_active": active,
+            "sessions_parked": parked,
             "sessions_admitted": admitted,
             "sessions_shed": sess_shed,
+            "sessions_resumed": resumed,
+            "leases_expired": expired,
             "prep_sheds": sum(s["sheds"] for s in sessions),
             "bundles_prepped": sum(s["bundles_prepped"] for s in sessions),
             "bundles_consumed": consumed,
             "bundles_returned": returned,
+            "bundles_burned": sum(s["bundles_burned"] for s in sessions),
             "bundles_outstanding": sum(s["bundles_outstanding"]
                                        for s in sessions),
             "prep_inflight": inflight,
@@ -331,15 +426,19 @@ class PitGateway:
             "counters": {
                 "sessions_admitted": st["sessions_admitted"],
                 "sessions_shed": st["sessions_shed"],
+                "sessions_resumed": st["sessions_resumed"],
+                "leases_expired": st["leases_expired"],
                 "prep_sheds": st["prep_sheds"],
                 "bundles_prepped": st["bundles_prepped"],
                 "bundles_consumed": st["bundles_consumed"],
                 "bundles_returned": st["bundles_returned"],
+                "bundles_burned": st["bundles_burned"],
                 "garbling_cache_hits": st["garbling_cache"]["hits"],
                 "garbling_cache_misses": st["garbling_cache"]["misses"],
             },
             "gauges": {
                 "sessions_active": st["sessions_active"],
+                "sessions_parked": st["sessions_parked"],
                 "bundles_outstanding": st["bundles_outstanding"],
                 "prep_inflight": st["prep_inflight"],
                 "prep_ewma_s": st["prep_ewma_s"],

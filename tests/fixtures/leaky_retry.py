@@ -1,0 +1,54 @@
+"""Deliberately leaky retry/lease error paths — secret-flow fixture.
+
+Resilience code sits exactly where exceptions meet the wire: backoff
+loops catch transport/protocol errors and then talk to the peer (error
+frames, resume hellos) and to telemetry (burn/retry instants). The rule
+pinned here is class-name-only: ``type(e).__name__`` is the most an
+error path may ship or record — ``str(e)``/``repr(e)``/tracebacks
+interpolate live values (label bytes, mask words, key material in the
+worst case). Each ``leak_*`` method seeds one violation; the ``*_ok``
+methods are the shipped idiom and must stay quiet. Linted by path only,
+never imported.
+"""
+
+import traceback
+
+from repro import obs
+from repro.net.transport import TransportClosed
+
+
+class LeakyRetry:
+    def __init__(self, transport, gcirc):
+        self.transport = transport
+        self.gcirc = gcirc
+
+    def leak_exc_text_on_retry(self, frame):
+        # str(e) in the error frame: whatever the exception interpolated
+        # (a slab slice, a mask word) goes to the peer
+        try:
+            self.transport.send(frame)
+        except TransportClosed as e:
+            self.transport.send(f"error retrying: {e}".encode())
+
+    def leak_traceback_on_lease_drop(self, frame):
+        try:
+            self.transport.send(frame)
+        except TransportClosed:
+            self.transport.send(traceback.format_exc().encode())
+
+    def leak_labels_in_burn_instant(self, bundle_id):
+        # the burn instant must carry ids/counters, never the bundle's
+        # label material
+        obs.instant("resilience.burn", bundle=bundle_id,
+                    labels=self.gcirc.input_zero.tobytes())
+
+    def retry_classname_ok(self, frame):
+        # the shipped discipline: class name only, plus counters
+        try:
+            self.transport.send(frame)
+        except TransportClosed as e:
+            self.transport.send(
+                f"error {type(e).__name__} (see local log)".encode())
+
+    def burn_instant_ok(self, bundle_id, attempt):
+        obs.instant("resilience.burn", bundle=bundle_id, attempt=attempt)

@@ -342,7 +342,29 @@ def test_secretflow_flags_span_attribute_leaks():
     assert "span_counts_ok" not in flagged
 
 
+def test_secretflow_flags_retry_path_leaks():
+    """Resilience/retry error paths: ``str(e)``/tracebacks to the wire
+    and label bytes in burn instants are flagged; the shipped
+    class-name-only idiom stays quiet."""
+    path = os.path.join(FIXTURES, "leaky_retry.py")
+    findings = sf_lint_file(path, rel="tests/fixtures/leaky_retry.py")
+    rules = {(f.rule, f.symbol.rsplit(".", 1)[-1]) for f in findings}
+    assert ("exc-to-wire", "leak_exc_text_on_retry") in rules
+    assert ("exc-to-wire", "leak_traceback_on_lease_drop") in rules
+    assert ("secret-to-span", "leak_labels_in_burn_instant") in rules
+    flagged = {f.symbol.rsplit(".", 1)[-1] for f in findings}
+    assert "retry_classname_ok" not in flagged
+    assert "burn_instant_ok" not in flagged
+
+
 def test_secretflow_quiet_on_shipped_protocol_paths():
+    # DEFAULT_PATHS includes the fault-injection + resilience modules:
+    # their retry/burn/error paths must stay class-name-only, with zero
+    # baseline entries
+    from repro.analysis.secretflow import DEFAULT_PATHS
+
+    assert "src/repro/net/resilience.py" in DEFAULT_PATHS
+    assert "src/repro/net/faults.py" in DEFAULT_PATHS
     assert run_secretflow(REPO) == []
 
 

@@ -192,6 +192,68 @@ def test_gateway_kill_mid_session_returns_bundles():
     gw.close()
 
 
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_gateway_kill_during_pipelined_refill_reclaims_exactly():
+    """The kill lands *inside* a pipelined ``refill_async`` prep stream
+    (not between requests): the in-flight prep must vanish without a
+    trace — neither side committed it — and the reclaim returns exactly
+    the prior unconsumed bundles. The refill thread dies loudly on the
+    injected reset, hence the warning filter."""
+    from repro.net import Fault, FaultyTransport
+    from repro.serve import NetPrivateServeEngine
+
+    model = _model(seed=23)
+    gw = PitGateway(model, S, impl="ref", max_sessions=4, pool_cap=8)
+    rng = np.random.default_rng(24)
+
+    # the victim's offline leg runs through a FaultyTransport so the
+    # kill can be armed deterministically relative to the op counter
+    off_c, off_s = InProcPipe.make_pair()
+    on_c, on_s = InProcPipe.make_pair()
+    gw.serve_transport(off_s, timeout=120)
+    gw.serve_transport(on_s, timeout=120)
+    ft = FaultyTransport(off_c)
+    victim = NetPrivateServeEngine(ft, on_c, pool_target=2, seed=1,
+                                   timeout=120)
+    survivor = _inproc_engine(gw, seed=2)
+
+    victim.preprocess(2)
+    survivor.preprocess(1)
+    x = rng.normal(0, 1, (S, D))
+    victim.run(x)  # consumes 1 of the victim's 2 bundles
+
+    ft.arm(Fault(ft.op + 4, "reset"))  # fires mid-prep-stream
+    refill = victim.refill_async(1)
+    refill.join(timeout=120)
+    assert not refill.is_alive(), "refill thread hung on the kill"
+    assert victim.pool_size() == 1, "failed refill must not grow the pool"
+
+    # finish the crash: the online leg vanishes too, no bye
+    victim.online.transport.close()
+    _wait(lambda: gw.stats()["sessions_active"] == 1,
+          what="victim session teardown")
+
+    st = gw.stats()
+    # exactly the unconsumed prior bundle came back; the interrupted
+    # prep was never committed on either side (no phantom bundle, no
+    # burn — only a mid-RUN interrupt burns)
+    assert st["bundles_prepped"] == 3  # victim 2 + survivor 1
+    assert st["bundles_returned"] == 1
+    assert st["bundles_burned"] == 0
+    assert st["bundles_consumed"] == 1
+    assert st["bundles_prepped"] == (
+        st["bundles_consumed"] + st["bundles_outstanding"]
+        + st["bundles_returned"] + st["bundles_burned"])
+
+    # the survivor is untouched and bit-identical
+    y = survivor.run(x)
+    sess = model.compile_session(S, impl="ref")
+    assert np.array_equal(y, sess.run(x, sess.preprocess(1)[0]))
+    survivor.close()
+    gw.close()
+
+
 # ---------------------------------------------------------------------------
 # admission control
 # ---------------------------------------------------------------------------
@@ -242,10 +304,12 @@ def test_gateway_stats_metrics_consistent_under_hammer():
     problems = []
     polls = [0]
     counter_keys = {"sessions_admitted", "sessions_shed", "prep_sheds",
+                    "sessions_resumed", "leases_expired",
                     "bundles_prepped", "bundles_consumed",
-                    "bundles_returned", "garbling_cache_hits",
-                    "garbling_cache_misses"}
-    gauge_keys = {"sessions_active", "bundles_outstanding", "prep_inflight",
+                    "bundles_returned", "bundles_burned",
+                    "garbling_cache_hits", "garbling_cache_misses"}
+    gauge_keys = {"sessions_active", "sessions_parked",
+                  "bundles_outstanding", "prep_inflight",
                   "prep_ewma_s", "bundles_per_s", "elapsed_s"}
 
     def reader():
@@ -259,10 +323,12 @@ def test_gateway_stats_metrics_consistent_under_hammer():
                 assert set(m["gauges"]) == gauge_keys
                 assert isinstance(m["spans"], dict)
                 assert st["sessions_active"] <= st["sessions_admitted"]
-                # every prepped bundle is outstanding, consumed, or
-                # returned — an identity only a consistent snapshot keeps
+                # every prepped bundle is outstanding, consumed,
+                # returned, or burned — an identity only a consistent
+                # snapshot keeps (burn accounting holds it mid-run too)
                 assert st["bundles_prepped"] == (
                     st["bundles_consumed"] + st["bundles_outstanding"]
+                    + st["bundles_burned"]
                     + sum(s["bundles_returned"] for s in st["sessions"]))
                 if last is not None:
                     for k in counter_keys:
